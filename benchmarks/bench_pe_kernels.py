@@ -1,0 +1,77 @@
+"""Paper Fig. 8: AI-PHY and classical signal-processing kernels on the PEs
+(batchnorm, layernorm, softmax, ReLU, CFFT, LS-CHE, MIMO-MMSE).
+
+Reports measured wall time on this host plus the TensorPool PE cycle model
+(256 PEs, paper IPCs 0.59-0.77) and the 1 ms TTI budget check for the
+paper's demanding case (8192 REs, 8x8 MIMO).
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jit
+from repro.core import pool
+from repro.phy import classical, ofdm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def main():
+    n = 8192  # REs (paper's demanding case)
+    d = 512
+    x = jax.random.normal(KEY, (n, d), jnp.float32)
+
+    ops = {
+        "relu": (jax.jit(jax.nn.relu), 1.0 * n * d),
+        "softmax": (jax.jit(lambda t: jax.nn.softmax(t, -1)), 5.0 * n * d),
+        "layernorm": (
+            jax.jit(lambda t: (t - t.mean(-1, keepdims=True))
+                    * jax.lax.rsqrt(t.var(-1, keepdims=True) + 1e-5)),
+            6.0 * n * d,
+        ),
+        "batchnorm": (
+            jax.jit(lambda t: (t - t.mean(0, keepdims=True))
+                    * jax.lax.rsqrt(t.var(0, keepdims=True) + 1e-5)),
+            6.0 * n * d,
+        ),
+    }
+    for name, (fn, flops) in ops.items():
+        us = time_jit(fn, x)
+        cyc = pool.pe_cycles(flops)
+        emit(f"fig8/{name}", us,
+             f"pe_cycles={cyc:.0f} pe_ms@1GHz={cyc/1e6:.3f}")
+
+    # CFFT over 8192 REs (64-pt per RB grouping -> use 4096-pt x 2 batches)
+    xc = (jax.random.normal(KEY, (16, 4096))
+          + 1j * jax.random.normal(KEY, (16, 4096)))
+    us = time_jit(jax.jit(classical.cfft), xc)
+    fft_flops = 16 * 5 * 4096 * 12  # 5 N log2 N
+    cyc = pool.pe_cycles(fft_flops, ipc=0.66)
+    emit("fig8/cfft", us, f"pe_cycles={cyc:.0f} pe_ms@1GHz={cyc/1e6:.3f}")
+
+    # LS channel estimation on a full slot
+    gcfg = ofdm.GridConfig(n_subcarriers=512, fft_size=512)
+    slot = ofdm.make_slot(KEY, gcfg, batch=16, snr_db=10.0)
+    ls = jax.jit(lambda y: classical.ls_channel_estimate(
+        y, slot["pilots"], slot["pilot_mask"], gcfg.pilot_stride))
+    us = time_jit(ls, slot["y"])
+    che_flops = 16 * 8 * 512 * 14
+    cyc = pool.pe_cycles(che_flops, ipc=0.77)
+    emit("fig8/ls_che", us, f"pe_cycles={cyc:.0f} pe_ms@1GHz={cyc/1e6:.3f}")
+
+    # MIMO-MMSE 8x8 over 8192 REs (paper's demanding case)
+    mcfg = ofdm.GridConfig(n_subcarriers=1024, fft_size=1024, n_tx=8, n_rx=8)
+    mslot = ofdm.make_mimo_slot(KEY, mcfg, batch=8, snr_db=15.0)  # 8k REs
+    det = jax.jit(lambda y, h: classical.mimo_mmse_detect(
+        y, h, mslot["noise_var"]))
+    us = time_jit(det, mslot["y"], mslot["h"])
+    # ~ (2/3 t^3 + 2 t^2 r + t r) cplx flops per RE, x4 real flops
+    t, r = 8, 8
+    mmse_flops = 8192 * 4 * (2 / 3 * t**3 + 2 * t * t * r + t * r) * 2
+    cyc = pool.pe_cycles(mmse_flops, ipc=0.59)
+    ms = cyc / 1e6
+    emit("fig8/mimo_mmse_8x8", us,
+         f"pe_cycles={cyc:.0f} pe_ms@1GHz={ms:.3f} within_tti={ms < 1.0}")
+
+
+if __name__ == "__main__":
+    main()

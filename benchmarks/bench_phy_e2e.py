@@ -1,0 +1,77 @@
+"""Paper §II: the end-to-end AI-PHY budget — classical uplink chain and a
+neural channel estimator must fit the 1 ms TTI on the modeled TensorPool
+(>= 6 TFLOPS requirement), and the models must fit the 4 MiB L1.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jit
+from repro.common.params import count_params, tree_size_bytes
+from repro.core import pool
+from repro.core.machine import TENSORPOOL_N7
+from repro.phy import classical, models, ofdm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def main():
+    gcfg = ofdm.GridConfig(n_subcarriers=512, fft_size=512)
+
+    # classical uplink: CFFT -> LS-CHE -> equalize -> demod (one slot)
+    @jax.jit
+    def classical_chain(y_time, slot_y, nv):
+        y = classical.cfft(y_time)
+        h = classical.ls_channel_estimate(
+            slot_y, jnp.exp(1j * jnp.zeros(512)), ofdm.pilot_mask(gcfg),
+            gcfg.pilot_stride,
+        )
+        xeq = slot_y / jnp.where(jnp.abs(h[:, None]) < 1e-3, 1.0, h[:, None])
+        return ofdm.qam16_demod_llr(xeq, nv)
+
+    slot = ofdm.make_slot(KEY, gcfg, batch=1, snr_db=10.0)
+    y_time = jax.random.normal(KEY, (14, 512)) + 1j * jax.random.normal(
+        jax.random.PRNGKey(1), (14, 512))
+    us = time_jit(classical_chain, y_time, slot["y"], slot["noise_var"])
+    flops = 14 * 5 * 512 * 9 + 8 * 512 * 14 + 6 * 14 * 512 * 4
+    ms = pool.pe_cycles(flops, ipc=0.7) / 1e6
+    emit("phy_e2e/classical_chain", us,
+         f"tensorpool_ms={ms:.3f} within_tti={ms < 1.0}")
+
+    # neural CHE (CE-ViT class): FLOPs -> TensorPool TE runtime
+    mcfg = models.CEViTConfig(d_model=128, heads=4, layers=4, d_ff=256,
+                              patch=4)
+    params = models.init_cevit(KEY, mcfg)
+    n_tok = 512 // mcfg.patch
+    # per-slot FLOPs: 4 layers x (attn + mlp) over n_tok tokens
+    flops = mcfg.layers * (
+        2 * n_tok * mcfg.d_model * 4 * mcfg.d_model  # qkv+o projections
+        + 2 * 2 * n_tok * n_tok * mcfg.d_model  # scores + pv
+        + 2 * 2 * n_tok * mcfg.d_model * mcfg.d_ff  # mlp
+    )
+    te_ms = flops / 2 / (pool.N_TES * pool.TE_MACS_PER_CYCLE * 0.67) / 1e6
+    pbytes = tree_size_bytes(jax.tree.map(
+        lambda x: x.astype(jnp.float16), params))
+    feats = jnp.zeros((1, 512, 4))
+    us = time_jit(jax.jit(lambda p, f: models.cevit_apply(p, mcfg, f)),
+                  params, feats)
+    emit("phy_e2e/cevit_che", us,
+         f"tensorpool_ms={te_ms:.4f} within_tti={te_ms < 1.0} "
+         f"params_fp16_KiB={pbytes/1024:.0f} fits_4MiB_L1={pbytes < 4<<20}")
+
+    # DeepRx-lite full receiver: FLOPs vs the paper's >= 6 TFLOPS bound
+    dcfg = models.DeepRxConfig(channels=64, blocks=4)
+    dparams = models.init_deeprx(KEY, dcfg)
+    grid = 14 * 512
+    conv_flops = 2 * grid * 9 * (
+        dcfg.in_features * 64 + dcfg.blocks * 2 * 64 * 64) + 2 * grid * 64 * 4
+    te_ms = conv_flops / 2 / (pool.N_TES * pool.TE_MACS_PER_CYCLE * 0.67) / 1e6
+    req_tflops = conv_flops / 1e-3 / 1e12  # to finish within 1 ms
+    pbytes = tree_size_bytes(jax.tree.map(
+        lambda x: x.astype(jnp.float16), dparams))
+    emit("phy_e2e/deeprx_receiver", 0.0,
+         f"tensorpool_ms={te_ms:.3f} required_tflops_for_tti={req_tflops:.2f} "
+         f"params_fp16_KiB={pbytes/1024:.0f} fits_4MiB_L1={pbytes < 4<<20}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""§Roofline table: aggregate the dry-run sweep JSONs into the per-cell
+three-term roofline report (also consumed by EXPERIMENTS.md)."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(dryrun_dir=DRYRUN_DIR):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        c["_file"] = os.path.basename(path)
+        cells.append(c)
+    return cells
+
+
+def main():
+    cells = load_cells()
+    if not cells:
+        emit("roofline/NO_DATA", 0.0, f"run scripts/run_dryrun_sweep.sh first")
+        return
+    ok = [c for c in cells if c.get("status") == "ok"]
+    err = [c for c in cells if c.get("status") != "ok"]
+    for c in sorted(ok, key=lambda c: (c["cell"], c["mesh"])):
+        emit(
+            f"roofline/{c['cell']}@{c['mesh']}",
+            c["t_overlap_s"] * 1e6,
+            f"bottleneck={c['bottleneck']} "
+            f"c_ms={c['compute_s']*1e3:.2f} m_ms={c['memory_s']*1e3:.2f} "
+            f"n_ms={c['collective_s']*1e3:.2f} "
+            f"mfu={c['mfu_overlap']*100:.1f}% "
+            f"useful={c['model_flops_ratio']*100:.0f}% "
+            f"fits={c.get('fits_hbm')}",
+        )
+    emit("roofline/summary", 0.0,
+         f"cells_ok={len(ok)} cells_error={len(err)}")
+    for c in err:
+        emit(f"roofline/ERROR/{c['cell']}@{c['mesh']}", 0.0,
+             c.get("error", "?")[:120])
+    # §Perf hillclimb variants (sp / fsdp / serve_tp sharding modes)
+    perf_dir = os.environ.get("PERF_DIR", "experiments/perf")
+    for c in load_cells(perf_dir):
+        if c.get("status") != "ok":
+            continue
+        variant = c["_file"].rsplit("__", 1)[-1].replace(".json", "")
+        emit(
+            f"perf/{c['cell']}@{c['mesh']}#{variant}",
+            c["t_overlap_s"] * 1e6,
+            f"bottleneck={c['bottleneck']} "
+            f"c_ms={c['compute_s']*1e3:.2f} m_ms={c['memory_s']*1e3:.2f} "
+            f"n_ms={c['collective_s']*1e3:.2f} "
+            f"mfu={c['mfu_overlap']*100:.1f}% "
+            f"useful={c['model_flops_ratio']*100:.0f}%",
+        )
+
+
+if __name__ == "__main__":
+    main()

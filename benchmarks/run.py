@@ -1,0 +1,51 @@
+"""Benchmark harness driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  fig5     — single-TE GEMM utilization vs size/bandwidth   (paper Fig. 5)
+  fig7     — 16-TE parallel GEMM + interleaved W access     (paper Fig. 7)
+  fig8     — PE kernels: BN/LN/softmax/ReLU/CFFT/LS/MMSE    (paper Fig. 8)
+  fig10    — sequential vs concurrent TE+PE+DMA blocks      (paper Fig. 10)
+  table2   — TensorPool vs TeraPool (accelerated vs PE-only)(paper Table II)
+  phy_e2e  — 1 ms TTI / 6 TFLOPS / 4 MiB L1 budget checks   (paper §II)
+  roofline — per (arch x shape x mesh) dry-run roofline     (assignment §g)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_concurrent,
+        bench_gemm,
+        bench_parallel_gemm,
+        bench_pe_kernels,
+        bench_phy_e2e,
+        bench_roofline,
+        bench_table2,
+    )
+
+    sections = [
+        ("fig5", bench_gemm),
+        ("fig7", bench_parallel_gemm),
+        ("fig8", bench_pe_kernels),
+        ("fig10", bench_concurrent),
+        ("table2", bench_table2),
+        ("phy_e2e", bench_phy_e2e),
+        ("roofline", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in sections:
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"{name}/FATAL,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

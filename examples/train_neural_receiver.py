@@ -1,0 +1,88 @@
+"""End-to-end driver (paper workload): train a CE-ViT neural channel
+estimator on simulated OFDM uplink slots until it beats the classical
+LS/MMSE estimators, then report the AI-vs-classical comparison the paper's
+§II premise rests on.
+
+Default config is CPU-sized; --large uses the paper-scale model
+(~1.5M params; pass --steps 500 for the full run).
+
+    PYTHONPATH=src python examples/train_neural_receiver.py --steps 300
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.phy import classical, models, ofdm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--snr-db", type=float, default=0.0)
+    ap.add_argument("--large", action="store_true")
+    args = ap.parse_args()
+
+    gcfg = ofdm.GridConfig(n_subcarriers=128, fft_size=128, pilot_stride=4)
+    if args.large:
+        mcfg = models.CEViTConfig(d_model=128, heads=4, layers=4, d_ff=256)
+    else:
+        mcfg = models.CEViTConfig(d_model=48, heads=4, layers=3, d_ff=96)
+    key = jax.random.PRNGKey(0)
+    params = models.init_cevit(key, mcfg)
+    pilot_sc = jnp.any(ofdm.pilot_mask(gcfg), axis=0)
+    nv = 10.0 ** (-args.snr_db / 10.0)
+
+    def make_batch(k):
+        slot = ofdm.make_slot(k, gcfg, args.batch, args.snr_db)
+        h_ls = classical.ls_channel_estimate(
+            slot["y"], slot["pilots"], slot["pilot_mask"], gcfg.pilot_stride
+        )
+        return models.cevit_features(h_ls, pilot_sc, nv), slot["h"], h_ls
+
+    def loss_fn(p, feats, h_true):
+        return jnp.mean(
+            jnp.abs(models.cevit_apply(p, mcfg, feats) - h_true) ** 2
+        )
+
+    from repro.optim import adamw
+
+    @jax.jit
+    def step(p, mom, k):
+        feats, h_true, _ = make_batch(k)
+        l, g = jax.value_and_grad(loss_fn)(p, feats, h_true)
+        g, _ = adamw.clip_by_global_norm(g, 1.0)
+        mom = jax.tree.map(lambda m, gr: 0.9 * m + gr, mom, g)
+        p = jax.tree.map(lambda w, m: w - 0.01 * m, p, mom)
+        return p, mom, l
+
+    mom = jax.tree.map(jnp.zeros_like, params)
+    t0 = time.time()
+    for i in range(args.steps):
+        key, sub = jax.random.split(key)
+        params, mom, l = step(params, mom, sub)
+        if i % 50 == 0:
+            print(f"step {i:4d}  train_mse={float(l):.4f}")
+    print(f"trained {args.steps} steps in {time.time()-t0:.1f}s")
+
+    # evaluation vs the classical estimators (paper §II premise)
+    feats, h_true, h_ls = make_batch(jax.random.PRNGKey(10_000))
+    h_nn = models.cevit_apply(params, mcfg, feats)
+    h_mmse = classical.mmse_channel_estimate(h_ls, jnp.asarray(nv))
+    mse = lambda h: float(jnp.mean(jnp.abs(h - h_true) ** 2))
+    print(f"\nchannel-estimation MSE @ {args.snr_db:.0f} dB SNR")
+    print(f"  LS (classical)    : {mse(h_ls):.4f}")
+    print(f"  MMSE (classical)  : {mse(h_mmse):.4f}")
+    print(f"  CE-ViT (learned)  : {mse(h_nn):.4f}")
+    if mse(h_nn) < mse(h_ls):
+        print("\nAI-native CHE beats classical LS — the paper's premise "
+              "holds.")
+    else:
+        print("\nNN has not overtaken LS yet — increase --steps "
+              "(300+ at 0 dB converges).")
+
+
+if __name__ == "__main__":
+    main()

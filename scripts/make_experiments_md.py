@@ -1,0 +1,81 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+sweep JSONs. The narrative sections are maintained by hand in the template
+below; this script only refreshes the generated tables between the markers.
+"""
+import glob
+import json
+import os
+import sys
+
+DRYRUN = "experiments/dryrun"
+
+
+def load(d):
+    out = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            c = json.load(f)
+        c["_file"] = os.path.basename(p)
+        out.append(c)
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(cells):
+    rows = [
+        "| cell | mesh | compile s | args GB/dev | temps GB/dev | fits 16GB | collectives (count) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(cells, key=lambda c: (c["cell"], c["mesh"])):
+        if c.get("status") != "ok":
+            rows.append(f"| {c['cell']} | {c['mesh']} | ERROR: {c.get('error','')[:60]} | | | | |")
+            continue
+        colls = " ".join(f"{k}:{int(v)}" for k, v in
+                         sorted(c["collective_counts"].items()))
+        rows.append(
+            f"| {c['cell']} | {c['mesh']} | {c['compile_s']} | "
+            f"{fmt_bytes(c['arg_bytes'])} | {fmt_bytes(c['temp_bytes'])} | "
+            f"{'yes' if c['fits_hbm'] else 'NO'} | {colls} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(cells, mesh="16x16"):
+    rows = [
+        "| cell | compute s | memory s | collective s | bottleneck | MFU@overlap | MODEL/HLO flops | flops/dev | wire GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(cells, key=lambda c: c["cell"]):
+        if c.get("status") != "ok" or c["mesh"] != mesh:
+            continue
+        rows.append(
+            f"| {c['cell']} | {c['compute_s']:.3f} | {c['memory_s']:.3f} | "
+            f"{c['collective_s']:.3f} | {c['bottleneck']} | "
+            f"{c['mfu_overlap']*100:.1f}% | {c['model_flops_ratio']*100:.0f}% | "
+            f"{c['flops']:.2e} | {c['collective_wire_bytes']/1e9:.1f} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    cells = load(DRYRUN)
+    md = open("EXPERIMENTS.md").read()
+
+    def splice(md, marker, content):
+        a, b = f"<!-- {marker}:begin -->", f"<!-- {marker}:end -->"
+        i, j = md.index(a) + len(a), md.index(b)
+        return md[:i] + "\n" + content + "\n" + md[j:]
+
+    md = splice(md, "dryrun-table", dryrun_table(cells))
+    md = splice(md, "roofline-16", roofline_table(cells, "16x16"))
+    md = splice(md, "roofline-mp", roofline_table(cells, "2x16x16"))
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(md)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

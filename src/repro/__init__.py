@@ -1,0 +1,4 @@
+"""repro — TensorPool (AI-Native RAN many-core processor) reproduced as a
+multi-pod JAX/TPU training & inference framework.  See DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,154 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+  compute_s    = executed FLOPs per device / peak FLOP/s
+  memory_s     = HBM bytes per device / HBM bandwidth
+  collective_s = wire bytes per device / link bandwidth
+
+FLOPs/bytes/collective-bytes come from ``repro.analysis.hloparse`` (loop-
+weighted, per-device — see DESIGN.md §8 for why raw cost_analysis cannot be
+used with scan-over-layers).  ``memory_analysis()`` supplies the true
+compiled per-device buffer footprint (fits / doesn't fit).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Optional
+
+from repro.analysis.hloparse import HloProfile, profile_hlo
+from repro.core.machine import Machine, TPU_V5E
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    cell: str
+    mesh: str
+    chips: int
+    # per-device quantities
+    flops: float
+    hbm_bytes: float
+    collective_wire_bytes: float
+    collective_operand_bytes: float
+    # terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    # step-time estimates
+    t_overlap_s: float  # perfect overlap: max(terms)
+    t_serial_s: float  # no overlap: sum(terms)
+    # usefulness
+    model_flops_global: float  # 6*N*D ideal
+    model_flops_ratio: float  # model / executed(global)
+    mfu_overlap: float  # model-flops utilization at perfect overlap
+    # memory footprint (from memory_analysis)
+    arg_bytes: int = 0
+    temp_bytes: int = 0
+    out_bytes: int = 0
+    fits_hbm: Optional[bool] = None
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    xla_flops_raw: float = 0.0  # cost_analysis() as-is (loop bodies once)
+    hbm_bytes_unfused: float = 0.0  # parsed boundary bytes (upper bound)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def row(self) -> str:
+        return (
+            f"{self.cell:40s} {self.mesh:9s} "
+            f"c={self.compute_s*1e3:9.3f}ms m={self.memory_s*1e3:9.3f}ms "
+            f"n={self.collective_s*1e3:9.3f}ms -> {self.bottleneck:10s} "
+            f"MFU={self.mfu_overlap*100:5.1f}% useful={self.model_flops_ratio*100:5.1f}%"
+        )
+
+
+def build_report(
+    cell: str,
+    mesh_name: str,
+    chips: int,
+    prof: HloProfile,
+    model_flops_global: float,
+    machine: Machine = TPU_V5E,
+    mem_stats=None,
+    xla_flops_raw: float = 0.0,
+    hbm_capacity: float = 16e9,
+    hbm_bytes_model: Optional[float] = None,
+) -> RooflineReport:
+    """FLOPs/collectives come from the compiled artifact (hloparse);
+    the memory term uses the kernel-aware cost model when provided
+    (hbm_bytes_model), falling back to the parsed unfused upper bound."""
+    hbm_bytes = (
+        hbm_bytes_model if hbm_bytes_model is not None else prof.boundary_bytes
+    )
+    compute_s = prof.flops / machine.peak_flops
+    memory_s = hbm_bytes / machine.hbm_bw
+    # bf16-corrected wire bytes (XLA:CPU carries bf16-program collectives in
+    # f32 payloads; the TPU target moves bf16 — see hloparse)
+    collective_s = prof.collective_wire_bytes_bf16corr / machine.link_bw
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    bottleneck = max(terms, key=terms.get)
+    t_overlap = max(terms.values())
+    t_serial = sum(terms.values())
+    executed_global = prof.flops * chips
+    ratio = model_flops_global / executed_global if executed_global else 0.0
+    mfu = (
+        (model_flops_global / chips / machine.peak_flops) / t_overlap
+        if t_overlap > 0 else 0.0
+    )
+    rep = RooflineReport(
+        cell=cell,
+        mesh=mesh_name,
+        chips=chips,
+        flops=prof.flops,
+        hbm_bytes=hbm_bytes,
+        collective_wire_bytes=prof.collective_wire_bytes_bf16corr,
+        collective_operand_bytes=prof.collective_operand_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        t_overlap_s=t_overlap,
+        t_serial_s=t_serial,
+        model_flops_global=model_flops_global,
+        model_flops_ratio=min(ratio, 1.0) if executed_global else 0.0,
+        mfu_overlap=mfu,
+        collective_counts=dict(prof.collective_counts),
+        xla_flops_raw=xla_flops_raw,
+        hbm_bytes_unfused=prof.boundary_bytes,
+    )
+    if mem_stats is not None:
+        rep.arg_bytes = int(mem_stats.argument_size_in_bytes)
+        rep.temp_bytes = int(mem_stats.temp_size_in_bytes)
+        rep.out_bytes = int(mem_stats.output_size_in_bytes)
+        rep.fits_hbm = (
+            rep.arg_bytes + rep.temp_bytes + rep.out_bytes
+        ) < hbm_capacity
+    return rep
+
+
+# -- ideal model FLOPs --------------------------------------------------------
+
+def model_flops_ideal(cfg, shape, n_params_active: float) -> float:
+    """6 * N_active * D tokens (train) / 2 * N * D (fwd-only) per step."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_params_active * shape.global_batch
+
+
+def active_params(cfg, n_params_total: int) -> float:
+    """Active parameter count for MoE (routed experts count top_k/E)."""
+    if cfg.family != "moe":
+        return float(n_params_total)
+    # expert weights: 3 matrices per expert
+    expert_params = (
+        cfg.num_experts * 3 * cfg.d_model * cfg.d_ff * cfg.num_layers
+    )
+    active_expert = expert_params * cfg.top_k / cfg.num_experts
+    return float(n_params_total - expert_params + active_expert)

@@ -1,0 +1,10 @@
+from repro.common.params import (
+    Param,
+    init_params,
+    schema_axes,
+    schema_shapes,
+    count_params,
+    stack_schemas,
+    cast_floating,
+    tree_size_bytes,
+)

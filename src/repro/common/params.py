@@ -1,0 +1,125 @@
+"""Parameter schema system: one definition yields init, logical axes, and counts.
+
+Pure-JAX replacement for a module framework (no flax).  A model declares a
+nested dict *schema* whose leaves are :class:`Param`.  From the schema we
+derive:
+
+  * ``init_params(schema, key)``   -> pytree of jnp arrays
+  * ``schema_axes(schema)``        -> pytree of logical-axis tuples (sharding)
+  * ``count_params(schema)``       -> int
+
+Logical axis names are resolved to mesh axes by ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """Declaration of a single parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim (None = replicated)
+    init: str = "normal"  # normal | zeros | ones | scaled | uniform
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"shape {self.shape} and axes {self.axes} rank mismatch"
+            )
+
+
+def _init_leaf(p: Param, key: jax.Array) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "normal":
+        return (p.scale * jax.random.normal(key, p.shape)).astype(p.dtype)
+    if p.init == "scaled":  # 1/sqrt(fan_in) — fan_in = second-to-last dim
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        return (jax.random.normal(key, p.shape) / math.sqrt(fan_in)).astype(p.dtype)
+    if p.init == "uniform":
+        return (
+            jax.random.uniform(key, p.shape, minval=-p.scale, maxval=p.scale)
+        ).astype(p.dtype)
+    raise ValueError(f"unknown init {p.init}")
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def init_params(schema: PyTree, key: jax.Array) -> PyTree:
+    """Materialize a schema into actual arrays (deterministic per-path keys)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_param)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_leaf(p, k) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def schema_axes(schema: PyTree) -> PyTree:
+    """Logical-axis pytree matching the parameter pytree structure."""
+    return jax.tree.map(lambda p: p.axes, schema, is_leaf=is_param)
+
+
+def schema_shapes(schema: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), schema, is_leaf=is_param
+    )
+
+
+def count_params(schema_or_params: PyTree) -> int:
+    def _n(x):
+        if isinstance(x, Param):
+            return int(np.prod(x.shape))
+        return int(np.prod(x.shape))
+
+    return sum(_n(l) for l in jax.tree.leaves(schema_or_params, is_leaf=is_param))
+
+
+def stack_schemas(schema: PyTree, n: int, axis_name: str = "layers") -> PyTree:
+    """Stack a per-layer schema n times along a leading 'layers' dim.
+
+    Used for scan-over-layers: params become (n, ...) with logical axis
+    ``axis_name`` on dim 0 (normally replicated / fsdp'd never sharded on it).
+    """
+
+    def _stack(p: Param) -> Param:
+        return Param(
+            shape=(n,) + p.shape,
+            axes=(axis_name,) + p.axes,
+            init=p.init,
+            scale=p.scale,
+            dtype=p.dtype,
+        )
+
+    return jax.tree.map(_stack, schema, is_leaf=is_param)
+
+
+def cast_floating(tree: PyTree, dtype) -> PyTree:
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, tree)
+
+
+def tree_size_bytes(tree: PyTree) -> int:
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree.leaves(tree)
+        if hasattr(x, "size")
+    )

@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    ModelConfig,
+    ShapeConfig,
+    MeshConfig,
+    TrainConfig,
+    SHAPES,
+    applicable_shapes,
+)
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (TE GEMM, fused
+FC+softmax, flash MHA, depthwise-separable conv block).  Each kernel has a
+jitted wrapper in ops.py and a pure-jnp oracle in ref.py."""
+from repro.kernels import ops, ref
+from repro.kernels.te_gemm import pick_block_shape

@@ -1,0 +1,101 @@
+"""Fused multi-head attention (paper §V-C MHA block) — flash-style Pallas
+kernel: online softmax, scores never leave VMEM.
+
+Grid: (batch*heads, q_blocks, kv_blocks) with kv innermost; VMEM scratch
+holds the running max m, normalizer l, and fp32 output accumulator — the
+direct analogue of the paper keeping the attention tile resident in L1 while
+TEs compute QK^T and PV and PEs apply the softmax between them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                kv_steps: int, bq: int, bkv: int, causal: bool, scale: float):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (bkv, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bkv)
+    if causal:
+        q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bkv), 0
+        )
+        k_pos = kv_i * bkv + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bkv), 1
+        )
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == kv_steps - 1)
+    def _finish():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def mha(
+    q: jax.Array,  # (BH, Sq, D) — batch*heads flattened
+    k: jax.Array,  # (BH, Sk, D)
+    v: jax.Array,  # (BH, Sk, D)
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    bq = min(bq, sq)
+    bkv = min(bkv, sk)
+    assert sq % bq == 0 and sk % bkv == 0
+    grid = (bh, sq // bq, sk // bkv)
+    scale = d**-0.5
+    kernel = functools.partial(
+        _mha_kernel, kv_steps=grid[2], bq=bq, bkv=bkv, causal=causal,
+        scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True unless a TPU backend is present, so the same
+call sites work on the CPU CI (interpret mode validates the kernel body) and
+on real hardware (compiled Mosaic kernels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import dwconv_block as _dw
+from repro.kernels import fc_softmax as _fc
+from repro.kernels import mha as _mha
+from repro.kernels import te_gemm as _te
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("epilogue", "block_shape"))
+def te_gemm(x, w, bias=None, epilogue: str = "none", block_shape=None):
+    return _te.te_gemm(
+        x, w, bias, epilogue=epilogue, block_shape=block_shape,
+        interpret=_default_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv"))
+def mha(q, k, v, causal: bool = True, bq: int = 128, bkv: int = 128):
+    return _mha.mha(
+        q, k, v, causal=causal, bq=bq, bkv=bkv,
+        interpret=_default_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def fc_softmax(x, w, bias=None, bm: int = 128, bk: int = 128):
+    return _fc.fc_softmax(
+        x, w, bias, bm=bm, bk=bk, interpret=_default_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bc",))
+def dwconv_block(x_padded, dw, pw, gamma, beta, bc: int = 128):
+    return _dw.dwconv_block(
+        x_padded, dw, pw, gamma, beta, bc=bc,
+        interpret=_default_interpret(),
+    )
+
+
+pick_block_shape = _te.pick_block_shape

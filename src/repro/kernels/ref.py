@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def te_gemm_ref(x, w, bias=None, epilogue: str = "none"):
+    z = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        z = z + bias.astype(jnp.float32)
+    if epilogue == "relu":
+        z = jnp.maximum(z, 0.0)
+    elif epilogue == "silu":
+        z = z * jax.nn.sigmoid(z)
+    elif epilogue == "softmax":
+        z = jax.nn.softmax(z, axis=-1)
+    return z.astype(x.dtype)
+
+
+def mha_ref(q, k, v, causal: bool = True):
+    """q,k,v: (BH, S, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (d**-0.5)
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def fc_softmax_ref(x, w, bias=None):
+    z = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        z = z + bias.astype(jnp.float32)
+    return jax.nn.softmax(z, axis=-1).astype(x.dtype)
+
+
+def dwconv_block_ref(x_padded, dw, pw, gamma, beta, eps: float = 1e-5):
+    """x_padded: (B, H+2, W+2, C); returns (B, H, W, F)."""
+    b, hp, wp, c = x_padded.shape
+    h, w = hp - 2, wp - 2
+    xf = x_padded.astype(jnp.float32)
+    y = jnp.zeros((b, h, w, c), jnp.float32)
+    for di in range(3):
+        for dj in range(3):
+            y = y + xf[:, di : di + h, dj : dj + w, :] * dw.astype(
+                jnp.float32
+            )[di, dj][None, None, None, :]
+    z = jnp.einsum("bhwc,cf->bhwf", y, pw.astype(jnp.float32))
+    mu = jnp.mean(z, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(z - mu), axis=-1, keepdims=True)
+    z = (z - mu) * jax.lax.rsqrt(var + eps)
+    z = z * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return jnp.maximum(z, 0.0).astype(x_padded.dtype)

@@ -1,0 +1,137 @@
+"""TE GEMM — the RedMulE tensor engine (paper §III-B) adapted to the TPU MXU.
+
+RedMulE dataflow: output-stationary — a (R x C(P+1)) tile of Z stays in the
+accumulation registers while X rows / W columns stream through; the streamer
+double-buffers the next tiles (X/W/Y buffers) to hide the multi-cycle L1
+interconnect latency.
+
+TPU mapping (DESIGN.md §2):
+  Z tile (bm x bn)        -> fp32 VMEM scratch accumulator (output-stationary)
+  X/W streamer + ROB      -> Pallas grid pipeline: the next (bm x bk)/(bk x bn)
+                             blocks are DMA'd HBM->VMEM while the MXU works
+  burst grouping          -> lane-aligned (multiple-of-128) block shapes
+  Kung balance (Eq. 2-3)  -> pick_block_shape solves the same inequality for
+                             VMEM budget + MXU alignment
+
+The kernel also supports the paper's "concurrent PE" epilogues (bias, ReLU /
+SiLU / row-softmax) computed on the VPU while the MXU streams the next tile —
+the Fig. 9/10 concurrency realized as fusion.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.balance import gemm_tile_balance, tile_vmem_bytes
+from repro.core.machine import TPU_V5E, Machine
+
+
+def pick_block_shape(
+    m: int, n: int, k: int, dtype_bytes: int = 2,
+    machine: Machine = TPU_V5E, vmem_budget: Optional[int] = None,
+) -> tuple[int, int, int]:
+    """Kung-balanced, MXU-aligned (bm, bn, bk).
+
+    Search multiples of 128 (MXU dimension / lane width: the 'burst' unit),
+    largest-first, requiring:
+      * double-buffered tile footprint <= VMEM budget (paper: X/W/Y buffers)
+      * Kung's inequality (Eq. 2-3) holds for the HBM->VMEM stream
+    """
+    budget = vmem_budget or machine.fast_mem_bytes // 2
+    cands = [512, 256, 128]
+    best = None
+    for bm in cands:
+        for bn in cands:
+            for bk in cands:
+                if bm > m and bm != 128 or bn > n and bn != 128:
+                    continue
+                if tile_vmem_bytes(bm, bn, bk, dtype_bytes) > budget:
+                    continue
+                rep = gemm_tile_balance(bm, bn, bk, dtype_bytes, machine)
+                score = (rep.balanced, bm * bn * bk)
+                if best is None or score > best[0]:
+                    best = (score, (bm, bn, bk))
+    assert best is not None
+    return best[1]
+
+
+def _te_gemm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
+                    epilogue: str, has_bias: bool):
+    """Grid: (m_blocks, n_blocks, k_steps); K innermost (output-stationary)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU work: accumulate the partial dot-product (RedMulE inner loop)
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if has_bias:
+            acc = acc + b_ref[...].astype(jnp.float32)
+        # "PE" (VPU) work fused with the TE (paper Fig. 9 concurrency)
+        if epilogue == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif epilogue == "silu":
+            acc = acc * jax.nn.sigmoid(acc)
+        elif epilogue == "softmax":  # row-wise over this n-block
+            acc = jax.nn.softmax(acc, axis=-1)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def te_gemm(
+    x: jax.Array,  # (M, K)
+    w: jax.Array,  # (K, N)
+    bias: Optional[jax.Array] = None,  # (N,)
+    *,
+    epilogue: str = "none",  # none | relu | silu | softmax(row within block)
+    block_shape: Optional[tuple[int, int, int]] = None,
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bn, bk = block_shape or pick_block_shape(m, n, k, x.dtype.itemsize)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{n},{k}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    if epilogue == "softmax":
+        assert bn == n, "row-softmax epilogue needs the full row in one block"
+    grid = (m // bm, n // bn, k // bk)
+    has_bias = bias is not None
+    if bias is None:
+        bias = jnp.zeros((n,), x.dtype)
+    bias2d = bias.reshape(1, n)
+
+    kernel = functools.partial(
+        _te_gemm_kernel, k_steps=grid[2], epilogue=epilogue,
+        has_bias=has_bias,
+    )
+    out_dtype = out_dtype or x.dtype
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w, bias2d)

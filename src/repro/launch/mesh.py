@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — ``pod`` is the
+low-bandwidth inter-pod (DCN) dimension and carries only data-parallel
+gradient reductions under the PARAM_RULES in repro.distributed.sharding.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over the actually-available local devices (tests/examples)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh(
+        (n // model_axis, model_axis), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

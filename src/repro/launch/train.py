@@ -1,0 +1,86 @@
+"""Training launcher.
+
+Local smoke run (1 device, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --steps 50
+
+Sharded run on a host mesh (n devices via XLA flag set by --host-devices):
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+      --host-devices 8 --mesh 4x2 --steps 20
+
+On a real TPU pod the same code path runs under the production mesh
+(repro.launch.mesh.make_production_mesh) with jax.distributed.initialize().
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--full-config", action="store_true",
+                    help="published size instead of the reduced smoke config")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="fake host devices (re-execs with XLA_FLAGS)")
+    ap.add_argument("--mesh", default=None, help="e.g. 4x2 => (data, model)")
+    ap.add_argument("--mode", default="base",
+                    choices=["base", "sp", "fsdp"])
+    args = ap.parse_args()
+
+    if args.host_devices and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices}"
+        )
+        os.execv(sys.executable, [sys.executable] + sys.argv)
+
+    import jax
+
+    from repro.configs import TrainConfig, get_config, get_smoke_config
+    from repro.data import TokenStream
+    from repro.distributed import sharding as shd
+    from repro.models import get_model
+    from repro.train import Trainer
+
+    cfg = get_config(args.arch) if args.full_config else \
+        get_smoke_config(args.arch)
+    model = get_model(cfg)
+    tc = TrainConfig(
+        learning_rate=args.lr, total_steps=args.steps,
+        microbatches=args.microbatches, checkpoint_dir=args.checkpoint_dir,
+    )
+    stream = TokenStream(cfg.vocab_size, args.batch, args.seq, seed=0)
+
+    mesh = None
+    state_sh = batch_sh = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model")[: len(shape)]
+        mesh = jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
+        )
+        pshard = shd.param_shardings(model, mesh, mode=args.mode)
+        state_sh = {"params": pshard,
+                    "opt": shd.opt_state_shardings(pshard, mesh)}
+
+    ctx = shd.activation_mesh(mesh, mode=args.mode) if mesh else None
+    if ctx:
+        ctx.__enter__()
+    trainer = Trainer(model, tc, stream, mesh=mesh,
+                      state_shardings=state_sh, batch_shardings=batch_sh)
+    trainer.install_signal_handlers()
+    state, start = trainer.init_or_resume()
+    state, end, hist = trainer.run(state, start, args.steps)
+    if ctx:
+        ctx.__exit__(None, None, None)
+    print(f"done: steps {start}..{end}, "
+          f"loss {float(hist[0]['loss']):.4f} -> {float(hist[-1]['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

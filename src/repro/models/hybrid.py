@@ -1,0 +1,199 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a *shared-weights* attention
+block applied every ``attn_every`` layers. [arXiv:2411.15242]
+
+Layer layout for num_layers=L, attn_every=k:
+  repeat n_super = L // k times:  [k x mamba block] + shared attention block
+  then n_tail = L % k trailing mamba blocks.
+
+Scan-over-layers is two-level: outer scan over super-blocks (stacked
+(n_super, k, ...) mamba params), inner scan over the k mamba blocks; the
+shared attention block's parameters are closed over (constant across the
+outer scan), which is exactly the weight sharing of the paper.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import stack_schemas
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+Params = Any
+
+
+def _counts(cfg: ModelConfig):
+    n_super = cfg.num_layers // cfg.attn_every
+    n_tail = cfg.num_layers % cfg.attn_every
+    return n_super, cfg.attn_every, n_tail
+
+
+def shared_attn_schema(cfg: ModelConfig):
+    return {
+        "ln1": L.norm_schema(cfg),
+        "attn": L.attention_schema(cfg),
+        "ln2": L.norm_schema(cfg),
+        "mlp": L.mlp_schema(cfg),
+    }
+
+
+def schema(cfg: ModelConfig):
+    n_super, per, n_tail = _counts(cfg)
+    sch = {
+        "embed": L.embedding_schema(cfg),
+        "shared_attn": shared_attn_schema(cfg),
+        "ln_f": L.norm_schema(cfg),
+    }
+    if n_super:
+        sch["super"] = stack_schemas(
+            stack_schemas(M.mamba_schema(cfg), per, "layers_inner"),
+            n_super,
+        )
+    if n_tail:
+        sch["tail"] = stack_schemas(M.mamba_schema(cfg), n_tail)
+    return sch
+
+
+def _attn_block(ap, x, cfg, positions, cache_kv=None, cache_pos=None):
+    x = constrain(x, ("batch", "seq", "embed"))
+    h = L.apply_norm(ap["ln1"], x, cfg)
+    cache = None if cache_kv is None else {"k": cache_kv[0], "v": cache_kv[1]}
+    attn_out, new_cache = L.attention_layer(
+        ap["attn"], h, cfg, positions=positions, causal=True,
+        cache=cache, cache_pos=cache_pos,
+    )
+    x = x + attn_out
+    h2 = L.apply_norm(ap["ln2"], x, cfg)
+    x = x + L.mlp_layer(ap["mlp"], h2, cfg)
+    new_kv = None if new_cache is None else (new_cache["k"], new_cache["v"])
+    return x, new_kv
+
+
+def _mamba_residual(mp, x, cfg, conv_state=None, ssm_state=None, decode=False):
+    x = constrain(x, ("batch", "seq", "embed"))
+    y, states = M.mamba_block(
+        mp, x, cfg, conv_state=conv_state, ssm_state=ssm_state, decode=decode
+    )
+    return x + y, states
+
+
+def forward(params, cfg: ModelConfig, batch, return_hidden: bool = False):
+    tokens = batch["tokens"]
+    seq = tokens.shape[1]
+    positions = jnp.arange(seq, dtype=jnp.int32)
+    x = L.embed_tokens(params["embed"], tokens, cfg, positions)
+    n_super, per, n_tail = _counts(cfg)
+    sa = params["shared_attn"]
+
+    def inner_fn(h, mp):
+        h, _ = _mamba_residual(mp, h, cfg)
+        return h, None
+
+    def super_fn(h, sp):
+        h, _ = jax.lax.scan(L.remat_wrap(inner_fn, cfg), h, sp)
+        h, _ = _attn_block(sa, h, cfg, positions)
+        return h, None
+
+    if n_super:
+        x, _ = jax.lax.scan(super_fn, x, params["super"])
+    if n_tail:
+        x, _ = jax.lax.scan(L.remat_wrap(inner_fn, cfg), x, params["tail"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    if return_hidden:
+        return x, {}
+    return L.unembed(params["embed"], x, cfg), {}
+
+
+def unembed(params, x, cfg: ModelConfig):
+    return L.unembed(params["embed"], x, cfg)
+
+
+# -- serving -----------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    n_super, per, n_tail = _counts(cfg)
+    conv, ssm = M.init_mamba_state(cfg, batch_size)
+
+    def stack(t, *ns):
+        for n in reversed(ns):
+            t = jnp.broadcast_to(t[None], (n,) + t.shape)
+        return t
+
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    if n_super:
+        kv_shape = (n_super, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim)
+        cache["k"] = jnp.zeros(kv_shape, cfg.dtype())
+        cache["v"] = jnp.zeros(kv_shape, cfg.dtype())
+        cache["super_conv"] = stack(conv, n_super, per)
+        cache["super_ssm"] = stack(ssm, n_super, per)
+    if n_tail:
+        cache["tail_conv"] = stack(conv, n_tail)
+        cache["tail_ssm"] = stack(ssm, n_tail)
+    return cache
+
+
+def _run_cached(params, cfg, x, positions, cache, cache_pos, decode):
+    n_super, per, n_tail = _counts(cfg)
+    sa = params["shared_attn"]
+    out_cache = dict(cache)
+
+    def inner_fn(h, xs):
+        mp, cs, ss = xs
+        h, (ncs, nss) = _mamba_residual(
+            mp, h, cfg, conv_state=cs, ssm_state=ss, decode=decode
+        )
+        return h, (ncs, nss)
+
+    if n_super:
+        def super_fn(h, xs):
+            sp, cs, ss, kc, vc = xs
+            h, (ncs, nss) = jax.lax.scan(
+                L.remat_wrap(inner_fn, cfg), h, (sp, cs, ss)
+            )
+            h, new_kv = _attn_block(sa, h, cfg, positions, cache_kv=(kc, vc),
+                                    cache_pos=cache_pos)
+            return h, (ncs, nss, new_kv[0], new_kv[1])
+
+        x, (scs, sss, ks, vs) = jax.lax.scan(
+            super_fn, x,
+            (params["super"], cache["super_conv"], cache["super_ssm"],
+             cache["k"], cache["v"]),
+        )
+        out_cache.update(super_conv=scs, super_ssm=sss, k=ks, v=vs)
+    if n_tail:
+        x, (tcs, tss) = jax.lax.scan(
+            L.remat_wrap(inner_fn, cfg), x,
+            (params["tail"], cache["tail_conv"], cache["tail_ssm"]),
+        )
+        out_cache.update(tail_conv=tcs, tail_ssm=tss)
+    return x, out_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    tokens = batch["tokens"]
+    seq = tokens.shape[1]
+    positions = jnp.arange(seq, dtype=jnp.int32)
+    x = L.embed_tokens(params["embed"], tokens, cfg, positions)
+    x, out_cache = _run_cached(
+        params, cfg, x, positions, cache, jnp.zeros((), jnp.int32), decode=False
+    )
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.unembed(params["embed"], x[:, -1:, :], cfg)
+    out_cache["pos"] = jnp.asarray(seq, jnp.int32)
+    return logits, out_cache
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache):
+    pos = cache["pos"]
+    positions = pos[None].astype(jnp.int32)
+    x = L.embed_tokens(params["embed"], token, cfg, positions)
+    x, out_cache = _run_cached(params, cfg, x, positions, cache, pos,
+                               decode=True)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    out_cache["pos"] = pos + 1
+    return logits, out_cache

@@ -1,0 +1,367 @@
+"""Shared model layers: norms, RoPE, chunked attention (flash semantics),
+gated MLPs, embeddings.
+
+All functions are pure; parameters are nested dicts built from
+``repro.common.params`` schemas.  Logical sharding axes used here:
+
+  batch, seq, kv_seq  — activation dims
+  embed               — model width (residual stream)
+  heads / kv_heads    — attention heads (tensor parallel)
+  head_dim            — per-head width
+  mlp                 — FFN hidden (tensor parallel)
+  vocab               — embedding rows (tensor parallel)
+  layers              — stacked-layer leading dim (scan-over-layers)
+
+Attention is implemented with a KV-chunked running-softmax scan — the same
+online-softmax semantics as FlashAttention — so the score matrix never
+materializes beyond (q_len, chunk).  This is the pure-jnp path used by the
+CPU dry-run and tests; on TPU the Pallas kernel in ``repro.kernels.mha`` is
+selected via ``ModelConfig.use_pallas`` (identical math, checked against the
+same oracle).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Param
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain, sp_active
+
+Params = Any
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_schema(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "layernorm":
+        return {
+            "scale": Param((d,), ("embed",), init="ones"),
+            "bias": Param((d,), ("embed",), init="zeros"),
+        }
+    return {"scale": Param((d,), ("embed",), init="ones")}
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention (online softmax — FlashAttention semantics in pure jnp)
+# ---------------------------------------------------------------------------
+
+def _gqa_reshape(q: jax.Array, num_kv_heads: int):
+    b, s, h, d = q.shape
+    g = h // num_kv_heads
+    return q.reshape(b, s, num_kv_heads, g, d)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KH, D)
+    v: jax.Array,  # (B, Sk, KH, D)
+    *,
+    causal: bool,
+    chunk_size: int,
+    q_positions: jax.Array,  # (Sq,) absolute positions of queries
+    kv_valid_len: Optional[jax.Array] = None,  # mask kv positions >= this
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; scores in fp32.
+
+    Peak memory per step is O(Sq * chunk) instead of O(Sq * Sk).
+    """
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    scale = d**-0.5
+    qr = _gqa_reshape(q, kh).astype(jnp.float32) * scale  # (B,Sq,KH,G,D)
+
+    chunk_size = min(chunk_size, sk)
+    if sk % chunk_size:  # pad KV to a chunk multiple; padded tail is masked
+        pad = chunk_size - sk % chunk_size
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_valid_len is None:
+            kv_valid_len = jnp.asarray(sk, jnp.int32)
+        sk = sk + pad
+    n_chunks = sk // chunk_size
+
+    # (n_chunks, B, C, KH, D)
+    ks = jnp.moveaxis(k.reshape(b, n_chunks, chunk_size, kh, d), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, n_chunks, chunk_size, kh, d), 1, 0)
+    kpos = jnp.arange(sk, dtype=jnp.int32).reshape(n_chunks, chunk_size)
+
+    m0 = jnp.full((b, sq, kh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kh, g), jnp.float32)
+    acc0 = jnp.zeros((b, sq, kh, g, d), jnp.float32)
+
+    @jax.named_scope("vmem_fused_attn")
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, kp = xs  # (B,C,KH,D), (B,C,KH,D), (C,)
+        s = jnp.einsum(
+            "bqhgd,bchd->bqhgc", qr, kc.astype(jnp.float32)
+        )  # (B,Sq,KH,G,C)
+        mask = jnp.ones((sq, chunk_size), bool)
+        if causal:
+            mask &= q_positions[:, None] >= kp[None, :]
+        if kv_valid_len is not None:
+            mask &= kp[None, :] < kv_valid_len
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqhgc,bchd->bqhgd", p, vc.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (ks, vs, kpos))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, KH, D)
+    v_cache: jax.Array,
+    pos: jax.Array,  # scalar int32 — current position (0-based)
+) -> jax.Array:
+    """Single-token attention against a (possibly sharded) KV cache.
+
+    Pure-einsum formulation: under GSPMD with the cache seq dim sharded over
+    the ``model`` axis this lowers to flash-decoding-style partial softmax +
+    all-reduce combines.
+    """
+    b, _, h, d = q.shape
+    _, s, kh, _ = k_cache.shape
+    g = h // kh
+    scale = d**-0.5
+    with jax.named_scope("vmem_fused_decode_attn"):
+        qr = _gqa_reshape(q, kh).astype(jnp.float32) * scale  # (B,1,KH,G,D)
+        scores = jnp.einsum(
+            "bqhgd,bshd->bqhgs", qr, k_cache.astype(jnp.float32)
+        )  # (B,1,KH,G,S)
+        kpos = jnp.arange(s, dtype=jnp.int32)
+        scores = jnp.where(
+            kpos[None, None, None, None, :] <= pos, scores, NEG_INF
+        )
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum(
+            "bqhgs,bshd->bqhgd", probs, v_cache.astype(jnp.float32)
+        )
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (QKV proj + rope + attention + out proj, KV cache aware)
+# ---------------------------------------------------------------------------
+
+def attention_schema(cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pd = cfg.pdtype()
+    sch = {
+        "wq": Param((d, h, hd), ("embed", "heads", "head_dim"), init="scaled", dtype=pd),
+        "wk": Param((d, kh, hd), ("embed", "kv_heads", "head_dim"), init="scaled", dtype=pd),
+        "wv": Param((d, kh, hd), ("embed", "kv_heads", "head_dim"), init="scaled", dtype=pd),
+        "wo": Param((h, hd, d), ("heads", "head_dim", "embed"), init="scaled", dtype=pd),
+    }
+    if cfg.qkv_bias:
+        sch["bq"] = Param((h, hd), ("heads", "head_dim"), init="zeros", dtype=pd)
+        sch["bk"] = Param((kh, hd), ("kv_heads", "head_dim"), init="zeros", dtype=pd)
+        sch["bv"] = Param((kh, hd), ("kv_heads", "head_dim"), init="zeros", dtype=pd)
+    return sch
+
+
+def attention_layer(
+    p: Params,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,  # (S,) absolute positions
+    causal: bool = True,
+    cache: Optional[dict] = None,  # {"k": (B,Smax,KH,hd), "v": ..., } or None
+    cache_pos: Optional[jax.Array] = None,  # scalar: write offset in cache
+    memory: Optional[jax.Array] = None,  # (B, Sm, D) for cross-attention
+):
+    """Returns (out, new_cache)."""
+    dt = cfg.dtype()
+    x = x.astype(dt)
+    kv_src = memory if memory is not None else x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.pos_embed == "rope" and memory is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if sp_active() and x.shape[1] > 1:
+        # sequence-parallel attention: queries stay seq-sharded over the
+        # model axis; K/V are all-gathered (for GQA this moves far fewer
+        # bytes than the Megatron AG(x)+RS(out) pair, and it removes the
+        # 16x replicated-attention waste when heads % model != 0)
+        q = constrain(q, ("batch", "seq", None, None))
+        k = constrain(k, ("batch", "full_seq", None, None))
+        v = constrain(v, ("batch", "full_seq", None, None))
+
+    new_cache = None
+    if cache is not None and memory is None:
+        # write current k/v into the cache at cache_pos
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0)
+        )
+        new_cache = {"k": kc, "v": vc}
+        if x.shape[1] == 1:  # decode step
+            out = decode_attention(q, kc, vc, cache_pos)
+        else:  # prefill: attend within the freshly written prefix
+            out = chunked_attention(
+                q, k, v, causal=causal, chunk_size=cfg.attn_chunk,
+                q_positions=positions,
+            )
+    else:
+        out = chunked_attention(
+            q, k, v, causal=causal and memory is None,
+            chunk_size=cfg.attn_chunk, q_positions=positions,
+        )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_schema(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pd = cfg.pdtype()
+    if cfg.mlp_gated:
+        return {
+            "wi_gate": Param((d, f), ("embed", "mlp"), init="scaled", dtype=pd),
+            "wi_up": Param((d, f), ("embed", "mlp"), init="scaled", dtype=pd),
+            "wo": Param((f, d), ("mlp", "embed"), init="scaled", dtype=pd),
+        }
+    return {
+        "wi": Param((d, f), ("embed", "mlp"), init="scaled", dtype=pd),
+        "bi": Param((f,), ("mlp",), init="zeros", dtype=pd),
+        "wo": Param((f, d), ("mlp", "embed"), init="scaled", dtype=pd),
+        "bo": Param((d,), ("embed",), init="zeros", dtype=pd),
+    }
+
+
+def mlp_layer(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = cfg.dtype()
+    x = x.astype(dt)
+    if cfg.mlp_gated:
+        g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(dt))
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt)) + p["bi"].astype(dt)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt)) + p["bo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_schema(cfg: ModelConfig):
+    pd = cfg.pdtype()
+    sch = {
+        "tok": Param(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+            init="normal", scale=0.02, dtype=pd,
+        )
+    }
+    if not cfg.tie_embeddings:
+        sch["unembed"] = Param(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+            init="scaled", dtype=pd,
+        )
+    if cfg.pos_embed == "learned":
+        # sized for the largest assigned shape cell
+        sch["pos"] = Param(
+            (32768, cfg.d_model), (None, "embed"),
+            init="normal", scale=0.01, dtype=pd,
+        )
+    return sch
+
+
+def embed_tokens(p: Params, tokens: jax.Array, cfg: ModelConfig,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    dt = cfg.dtype()
+    x = jnp.take(p["tok"].astype(dt), tokens, axis=0)
+    if cfg.pos_embed == "learned" and positions is not None:
+        x = x + jnp.take(p["pos"].astype(dt), positions, axis=0)[None, :, :]
+    return x
+
+
+def unembed(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = cfg.dtype()
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, p["tok"].astype(dt))
+    return jnp.einsum("bsd,dv->bsv", x, p["unembed"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Remat policies
+# ---------------------------------------------------------------------------
+
+def remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots_saveable":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(f"unknown remat policy {cfg.remat}")

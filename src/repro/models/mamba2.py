@@ -1,0 +1,230 @@
+"""Mamba2 (SSD — state-space duality) block: chunked-parallel training form +
+recurrent decode form. [arXiv:2405.21060]
+
+The chunked form is GEMM-dominated (intra-chunk (Q x Q) score matmuls and
+chunk-state outer products), which is exactly the paper's TE-offload shape;
+the recurrent decode form is elementwise state update (PE/VPU work).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Param
+from repro.configs.base import ModelConfig
+
+Params = Any
+
+SSM_CHUNK = 256
+
+
+def mamba_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    g, n, w = cfg.ssm_groups, cfg.ssm_state, cfg.conv_width
+    conv_ch = di + 2 * g * n
+    pd = cfg.pdtype()
+    d_in_proj = 2 * di + 2 * g * n + h
+    return {
+        "in_proj": Param((d, d_in_proj), ("embed", "mlp"), init="scaled", dtype=pd),
+        "conv_w": Param((w, conv_ch), (None, "mlp"), init="scaled", dtype=pd),
+        "conv_b": Param((conv_ch,), ("mlp",), init="zeros", dtype=pd),
+        "dt_bias": Param((h,), ("heads",), init="zeros", dtype=jnp.float32),
+        "a_log": Param((h,), ("heads",), init="zeros", dtype=jnp.float32),
+        "d_skip": Param((h,), ("heads",), init="ones", dtype=jnp.float32),
+        "norm": Param((di,), ("mlp",), init="ones", dtype=pd),
+        "out_proj": Param((di, d), ("mlp", "embed"), init="scaled", dtype=pd),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv over seq. u: (B,S,C); w: (W,C); b: (C,).
+
+    Returns (y, new_state) where state holds the last W-1 inputs.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)  # (B, S+W-1, C)
+    y = sum(
+        up[:, i : i + u.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    y = y + b[None, None, :]
+    new_state = up[:, -(width - 1) :, :]
+    return jax.nn.silu(y), new_state
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * g * n], axis=-1)
+    return z, xbc, dt  # xbc: conv channels (x | B | C), dt: (…, H)
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    x, bmat, cmat = jnp.split(xbc, [di, di + g * n], axis=-1)
+    return x, bmat, cmat
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P) — dt-scaled inputs NOT applied yet
+    dt: jax.Array,  # (B, S, H) post-softplus
+    a: jax.Array,  # (H,) negative
+    bmat: jax.Array,  # (B, S, G, N)
+    cmat: jax.Array,  # (B, S, G, N)
+    *,
+    chunk: int = SSM_CHUNK,
+    initial_state: Optional[jax.Array] = None,  # (B, H, N, P)
+):
+    """Chunked SSD scan. Returns (y, final_state)."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hg = h // g
+    chunk = min(chunk, s)
+    s_orig = s
+    if s % chunk:  # pad with identity steps (dt=0 -> decay 1, zero input)
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+
+    f32 = jnp.float32
+    xb = (x.astype(f32) * dt[..., None].astype(f32))  # input-scaled
+    # expand groups to heads
+    bh = jnp.repeat(bmat.astype(f32), hg, axis=2)  # (B,S,H,N)
+    ch = jnp.repeat(cmat.astype(f32), hg, axis=2)
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+    xc, dtc, bc, cc = map(to_chunks, (xb, dt.astype(f32), bh, ch))
+    s0 = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((b, h, n, p), f32)
+    )
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @jax.named_scope("vmem_fused_ssd")
+    def body(state, xs):
+        xck, dtk, bk, ck = xs  # (B,Q,H,P), (B,Q,H), (B,Q,H,N) x2
+        dlog = dtk * a[None, None, :]  # (B,Q,H) negative
+        cum = jnp.cumsum(dlog, axis=1)  # inclusive
+        # intra-chunk: mask the exponent (not the product) so the upper
+        # triangle never sees exp(+large) -> inf * 0 = NaN
+        cb = jnp.einsum("bqhn,bkhn->bhqk", ck, bk)
+        diff = (cum[:, :, :, None].transpose(0, 2, 1, 3)
+                - cum[:, :, :, None].transpose(0, 2, 3, 1))  # (B,H,Q,K)
+        diff = jnp.where(mask[None, None, :, :], diff, -jnp.inf)
+        m = cb * jnp.exp(diff)
+        y = jnp.einsum("bhqk,bkhp->bqhp", m, xck)
+        # inter-chunk contribution from carried state
+        cdecay = jnp.exp(cum)  # (B,Q,H)
+        y = y + jnp.einsum("bqhn,bhnp->bqhp", ck * cdecay[..., None], state)
+        # state update
+        end = cum[:, -1:, :]  # (B,1,H)
+        sdecay = jnp.exp(end - cum)  # (B,Q,H)
+        s_chunk = jnp.einsum("bqhn,bqhp->bhnp", bk * sdecay[..., None], xck)
+        state = jnp.exp(end[:, 0, :])[:, :, None, None] * state + s_chunk
+        return state, y
+
+    final_state, ys = jax.lax.scan(body, s0, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)[:, :s_orig]
+    return y, final_state
+
+
+def ssd_decode_step(
+    x: jax.Array,  # (B, 1, H, P)
+    dt: jax.Array,  # (B, 1, H)
+    a: jax.Array,  # (H,)
+    bmat: jax.Array,  # (B, 1, G, N)
+    cmat: jax.Array,  # (B, 1, G, N)
+    state: jax.Array,  # (B, H, N, P)
+):
+    f32 = jnp.float32
+    b, _, h, p = x.shape
+    g = bmat.shape[2]
+    hg = h // g
+    xb = x[:, 0].astype(f32) * dt[:, 0, :, None].astype(f32)  # (B,H,P)
+    bh = jnp.repeat(bmat[:, 0].astype(f32), hg, axis=1)  # (B,H,N)
+    ch = jnp.repeat(cmat[:, 0].astype(f32), hg, axis=1)
+    decay = jnp.exp(dt[:, 0].astype(f32) * a[None, :])  # (B,H)
+    state = decay[:, :, None, None] * state + jnp.einsum(
+        "bhn,bhp->bhnp", bh, xb
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", ch, state)  # (B,H,P)
+    return y[:, None], state
+
+
+def mamba_block(
+    p: Params,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    conv_state: Optional[jax.Array] = None,
+    ssm_state: Optional[jax.Array] = None,
+    decode: bool = False,
+):
+    """Returns (y, (new_conv_state, new_ssm_state))."""
+    dt_ = cfg.dtype()
+    b, s, _ = x.shape
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    proj = jnp.einsum("bsd,de->bse", x.astype(dt_), p["in_proj"].astype(dt_))
+    z, xbc, dtr = _split_proj(cfg, proj)
+    if decode:
+        xbc, new_conv = _causal_conv(
+            xbc, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_),
+            state=conv_state,
+        )
+    else:
+        xbc, new_conv = _causal_conv(
+            xbc, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_), state=None
+        )
+    xs, bmat, cmat = _split_xbc(cfg, xbc)
+    xs = xs.reshape(b, s, h, pdim)
+    bmat = bmat.reshape(b, s, g, n)
+    cmat = cmat.reshape(b, s, g, n)
+    dtv = jax.nn.softplus(
+        dtr.astype(jnp.float32) + p["dt_bias"][None, None, :]
+    )  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,) negative
+
+    if decode:
+        y, new_ssm = ssd_decode_step(xs, dtv, a, bmat, cmat, ssm_state)
+    else:
+        y, new_ssm = ssd_chunked(
+            xs, dtv, a, bmat, cmat, initial_state=ssm_state,
+            chunk=min(SSM_CHUNK, s),
+        )
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, cfg.d_inner).astype(dt_)
+    # gated RMSNorm (mamba2 style)
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + cfg.norm_eps)).astype(dt_)
+    y = y * p["norm"].astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    return out, (new_conv, new_ssm)
+
+
+def init_mamba_state(cfg: ModelConfig, batch_size: int):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return (
+        jnp.zeros((batch_size, cfg.conv_width - 1, conv_ch), cfg.dtype()),
+        jnp.zeros(
+            (batch_size, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32,
+        ),
+    )

@@ -1,0 +1,343 @@
+"""Mixture-of-Experts transformer (moonshot-v1-16b-a3b, dbrx-132b).
+
+Expert dispatch is sort-based with a capacity bound (GShard-style dropping,
+MegaBlocks-style sorted grouping): assignments are sorted by expert id,
+ranked within their expert group, and placed into an (E, C) slot grid.  The
+two large data movements are pure gathers (dispatch: slot -> token row;
+combine: assignment -> slot row), which shard cleanly with experts on the
+``model``/``expert`` mesh axis (expert parallelism) and slots on ``data`` —
+GSPMD lowers the shuffles to all-to-all-class collectives.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Param, stack_schemas
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+Params = Any
+
+
+def moe_mlp_schema(cfg: ModelConfig):
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    pd = cfg.pdtype()
+    sch = {
+        "router": Param((d, e), ("embed", None), init="scaled", dtype=jnp.float32),
+        "wi_gate": Param((e, d, f), ("expert", "embed", "mlp"), init="scaled", dtype=pd),
+        "wi_up": Param((e, d, f), ("expert", "embed", "mlp"), init="scaled", dtype=pd),
+        "wo": Param((e, f, d), ("expert", "mlp", "embed"), init="scaled", dtype=pd),
+    }
+    if cfg.num_shared_experts > 0:
+        sch["shared"] = L.mlp_schema(cfg, cfg.num_shared_experts * cfg.d_ff)
+    return sch
+
+
+def expert_capacity(
+    cfg: ModelConfig, num_tokens: int, factor: float | None = None
+) -> int:
+    cf = cfg.capacity_factor if factor is None else factor
+    cap = int(math.ceil(num_tokens * cfg.top_k / cfg.num_experts * cf))
+    return max(8, -(-cap // 8) * 8)  # round up to a multiple of 8
+
+
+def _capacity(cfg: ModelConfig, t: int, serving: bool) -> int:
+    if serving:
+        # decode-sized batches get exact no-drop dispatch; large prefills use
+        # a generous 2x capacity (drops rare; standard serving trade-off)
+        if t * cfg.top_k <= 8192:
+            return t * cfg.top_k
+        return min(t * cfg.top_k, expert_capacity(cfg, t, factor=2.0))
+    return expert_capacity(cfg, t)
+
+
+def _dispatch_indices(idx: jax.Array, t: int, k: int, e: int, c: int):
+    """Sort-based slot assignment for t tokens (pure index work, local).
+
+    Returns (slot_token (E*C,), slot_of_assign (t*k,)); sentinel = t / E*C.
+    """
+    flat_e = idx.reshape(-1)  # (t*k,)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.bincount(flat_e, length=e)
+    group_start = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]]
+    )
+    rank = jnp.arange(t * k, dtype=jnp.int32) - group_start[sorted_e].astype(
+        jnp.int32
+    )
+    valid = rank < c
+    slot = sorted_e.astype(jnp.int32) * c + rank
+    token_of_assign = (sort_idx // k).astype(jnp.int32)
+    slot_token = jnp.full((e * c,), t, jnp.int32)
+    slot_token = slot_token.at[jnp.where(valid, slot, e * c)].set(
+        token_of_assign, mode="drop"
+    )
+    slot_of_assign = jnp.full((t * k,), e * c, jnp.int32)
+    slot_of_assign = slot_of_assign.at[sort_idx].set(
+        jnp.where(valid, slot, e * c)
+    )
+    return slot_token, slot_of_assign
+
+
+def _dp_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def moe_mlp_layer(p: Params, x: jax.Array, cfg: ModelConfig,
+                  serving: bool = False):
+    """x: (B, S, D). Returns (y, aux) with router load-balance loss.
+
+    Dispatch/combine are *local per data shard* (per-shard capacity) via
+    shard_map when a mesh is installed — the gathers never cross shards, so
+    the only inter-chip traffic is the expert-parallel all-to-all of the
+    dispatched activations around the grouped GEMMs (the production EP
+    pattern).  Without a mesh (single-device tests) the same code runs with
+    one "shard".
+    """
+    from repro.distributed.sharding import get_activation_mesh
+
+    dt = cfg.dtype()
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    # --- routing (fp32) ---
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate, idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux_loss = e * jnp.sum(me * ce) / k
+
+    mesh = get_activation_mesh()
+    dp_axes = _dp_axes(mesh) if mesh is not None else ()
+    dp = 1
+    if dp_axes:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for a in dp_axes:
+            dp *= sizes[a]
+    if dp == 1 or t % dp != 0:
+        x_disp, soa = _dispatch_local(cfg, xt, idx, t, e, k, serving)
+        c_loc = x_disp.shape[1]
+        y_e = _expert_ffn(p, x_disp[None].reshape(e, -1, d).astype(dt), cfg)
+        y = _combine_local(y_e, soa, gate, t, e, k, d)
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        t_loc = t // dp
+        c_loc = _capacity(cfg, t_loc, serving)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        tp = sizes.get("model", 1)
+        ep = tp if (tp > 1 and e % tp == 0) else 1
+        e_loc = e // ep
+        e_spec = "model" if ep > 1 else None
+
+        def disp(xt_l, idx_l):
+            # local slot assignment + gather; each model shard slices the
+            # block of experts it owns (no communication at all)
+            st, soa_l = _dispatch_indices(idx_l, t_loc, k, e, c_loc)
+            x_pad = jnp.concatenate(
+                [xt_l, jnp.zeros((1, d), xt_l.dtype)], axis=0
+            )
+            x_disp_full = jnp.take(x_pad, st, axis=0).reshape(e, c_loc, d)
+            if ep > 1:
+                me = jax.lax.axis_index("model")
+                x_disp_full = jax.lax.dynamic_slice_in_dim(
+                    x_disp_full, me * e_loc, e_loc, axis=0
+                )
+            return x_disp_full, soa_l
+
+        x_disp, soa = jax.shard_map(
+            disp, mesh=mesh,
+            in_specs=(P(dp_spec, None), P(dp_spec, None)),
+            out_specs=(P(e_spec, dp_spec, None), P(dp_spec)),
+            check_vma=False,
+        )(xt, idx)
+        # expert-parallel grouped GEMMs: weights are EP-sharded over model,
+        # so each shard runs a purely local grouped GEMM
+        x_disp = constrain(x_disp.astype(dt), ("expert", "dispatch", "embed"))
+        y_e = _expert_ffn(p, x_disp, cfg)
+        y_e = constrain(y_e, ("expert", "dispatch", "embed"))
+
+        def comb(y_l, soa_l, gate_l):
+            # per-model-shard partial combine + psum: each shard sums the
+            # contributions of its own experts, then one (t_loc, d)
+            # all-reduce over the model axis merges them (2.3x less wire
+            # than all-gathering the slot grid)
+            n_loc = y_l.shape[0] * c_loc
+            if ep > 1:
+                me = jax.lax.axis_index("model")
+                offset = me * n_loc
+            else:
+                offset = 0
+            local = soa_l - offset
+            ok = (local >= 0) & (local < n_loc)
+            y_pad = jnp.concatenate(
+                [y_l.reshape(n_loc, d), jnp.zeros((1, d), y_l.dtype)], axis=0
+            )
+            y_flat = jnp.take(
+                y_pad, jnp.where(ok, local, n_loc), axis=0
+            )  # (t_loc*k, d)
+            part = jnp.sum(
+                y_flat.reshape(t_loc, k, d)
+                * gate_l[..., None].astype(y_flat.dtype),
+                axis=1,
+            )
+            if ep > 1:
+                part = jax.lax.psum(part, "model")
+            return part
+
+        y = jax.shard_map(
+            comb, mesh=mesh,
+            in_specs=(P(e_spec, dp_spec, None), P(dp_spec), P(dp_spec, None)),
+            out_specs=P(dp_spec, None),
+            check_vma=False,
+        )(y_e, soa, gate)
+
+    if cfg.num_shared_experts > 0:
+        y = y + L.mlp_layer(p["shared"], xt[None], cfg).reshape(t, d)
+
+    return y.reshape(b, s, d).astype(dt), aux_loss
+
+
+def _expert_ffn(p: Params, x_disp: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = cfg.dtype()
+    g = jnp.einsum("ecd,edf->ecf", x_disp, p["wi_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", x_disp, p["wi_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))
+
+
+def _dispatch_local(cfg, xt, idx, t, e, k, serving):
+    c = _capacity(cfg, t, serving)
+    st, soa = _dispatch_indices(idx, t, k, e, c)
+    x_pad = jnp.concatenate([xt, jnp.zeros((1, xt.shape[1]), xt.dtype)], axis=0)
+    x_disp = jnp.take(x_pad, st, axis=0).reshape(e, c, xt.shape[1])
+    return x_disp, soa
+
+
+def _combine_local(y_e, soa, gate, t, e, k, d):
+    y_pad = jnp.concatenate(
+        [y_e.reshape(-1, d), jnp.zeros((1, d), y_e.dtype)], axis=0
+    )
+    y_flat = jnp.take(y_pad, soa, axis=0)
+    return jnp.sum(
+        y_flat.reshape(t, k, d) * gate[..., None].astype(y_flat.dtype), axis=1
+    )
+
+
+# --- full model (same block layout as the dense transformer) ---------------
+
+def block_schema(cfg: ModelConfig):
+    return {
+        "ln1": L.norm_schema(cfg),
+        "attn": L.attention_schema(cfg),
+        "ln2": L.norm_schema(cfg),
+        "moe": moe_mlp_schema(cfg),
+    }
+
+
+def schema(cfg: ModelConfig):
+    return {
+        "embed": L.embedding_schema(cfg),
+        "layers": stack_schemas(block_schema(cfg), cfg.num_layers),
+        "ln_f": L.norm_schema(cfg),
+    }
+
+
+def _block(lp, x, cfg, positions, cache_kv=None, cache_pos=None,
+           serving=False):
+    x = constrain(x, ("batch", "seq", "embed"))
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    cache = None if cache_kv is None else {"k": cache_kv[0], "v": cache_kv[1]}
+    attn_out, new_cache = L.attention_layer(
+        lp["attn"], h, cfg, positions=positions, causal=True,
+        cache=cache, cache_pos=cache_pos,
+    )
+    x = x + attn_out
+    h2 = L.apply_norm(lp["ln2"], x, cfg)
+    mlp_out, aux = moe_mlp_layer(lp["moe"], h2, cfg, serving=serving)
+    x = x + mlp_out
+    new_kv = None if new_cache is None else (new_cache["k"], new_cache["v"])
+    return x, new_kv, aux
+
+
+def forward(params, cfg: ModelConfig, batch, return_hidden: bool = False):
+    tokens = batch["tokens"]
+    seq = tokens.shape[1]
+    positions = jnp.arange(seq, dtype=jnp.int32)
+    x = L.embed_tokens(params["embed"], tokens, cfg, positions)
+
+    def layer_fn(h, lp):
+        h, _, aux = _block(lp, h, cfg, positions)
+        return h, aux
+
+    x, auxes = jax.lax.scan(L.remat_wrap(layer_fn, cfg), x, params["layers"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    aux = {"router_loss": jnp.mean(auxes) * cfg.router_aux_coef}
+    if return_hidden:
+        return x, aux
+    return L.unembed(params["embed"], x, cfg), aux
+
+
+def unembed(params, x, cfg: ModelConfig):
+    return L.unembed(params["embed"], x, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    shape = (cfg.num_layers, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype()),
+        "v": jnp.zeros(shape, cfg.dtype()),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _layers_with_cache(params, cfg, x, positions, cache, cache_pos):
+    def layer_fn(h, xs):
+        lp, kc, vc = xs
+        h, new_kv, _ = _block(lp, h, cfg, positions, cache_kv=(kc, vc),
+                              cache_pos=cache_pos, serving=True)
+        return h, new_kv
+
+    x, (ks, vs) = jax.lax.scan(
+        L.remat_wrap(layer_fn, cfg), x,
+        (params["layers"], cache["k"], cache["v"]),
+    )
+    return x, ks, vs
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    tokens = batch["tokens"]
+    seq = tokens.shape[1]
+    positions = jnp.arange(seq, dtype=jnp.int32)
+    x = L.embed_tokens(params["embed"], tokens, cfg, positions)
+    x, ks, vs = _layers_with_cache(
+        params, cfg, x, positions, cache, jnp.zeros((), jnp.int32)
+    )
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.unembed(params["embed"], x[:, -1:, :], cfg)
+    return logits, {"k": ks, "v": vs, "pos": jnp.asarray(seq, jnp.int32)}
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache):
+    pos = cache["pos"]
+    positions = pos[None].astype(jnp.int32)
+    x = L.embed_tokens(params["embed"], token, cfg, positions)
+    x, ks, vs = _layers_with_cache(params, cfg, x, positions, cache, pos)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"k": ks, "v": vs, "pos": pos + 1}

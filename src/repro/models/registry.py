@@ -1,0 +1,125 @@
+"""Uniform model API over all architecture families.
+
+``get_model(cfg)`` returns a :class:`Model` with:
+  schema()                      parameter schema (init + logical axes)
+  init(key)                     parameters
+  forward(params, batch)        (logits, aux) — full-sequence training fwd
+  init_cache(params?, b, s)     serving cache (KV / SSM / RWKV states)
+  prefill(params, batch, cache) (last_logits, cache)
+  decode_step(params, tok, c)   (logits, cache)
+  input_specs(shape)            ShapeDtypeStructs for the dry-run
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import init_params, schema_axes
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import hybrid, moe, rwkv6, transformer, whisper
+
+Params = Any
+
+_FAMILY = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "hybrid": hybrid,
+    "ssm": rwkv6,
+    "audio": whisper,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    module: Any
+
+    def schema(self):
+        return self.module.schema(self.cfg)
+
+    def init(self, key: jax.Array) -> Params:
+        return init_params(self.schema(), key)
+
+    def param_axes(self):
+        return schema_axes(self.schema())
+
+    def forward(self, params, batch, return_hidden: bool = False):
+        return self.module.forward(
+            params, self.cfg, batch, return_hidden=return_hidden
+        )
+
+    def unembed(self, params, x):
+        return self.module.unembed(params, x, self.cfg)
+
+    def init_cache(self, batch_size: int, max_len: int):
+        return self.module.init_cache(self.cfg, batch_size, max_len)
+
+    def prefill(self, params, batch, cache):
+        return self.module.prefill(params, self.cfg, batch, cache)
+
+    def decode_step(self, params, token, cache):
+        return self.module.decode_step(params, self.cfg, token, cache)
+
+    # -- dry-run input specs -------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+        cfg = self.cfg
+        b = shape.global_batch
+        if shape.kind == "train":
+            s = shape.seq_len
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, self._text_len(s)), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, self._text_len(s)), jnp.int32),
+            }
+            self._add_modality(specs, b)
+            return specs
+        if shape.kind == "prefill":
+            s = shape.seq_len
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, self._text_len(s)), jnp.int32)
+            }
+            self._add_modality(specs, b)
+            return specs
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        raise ValueError(shape.kind)
+
+    def _text_len(self, seq_len: int) -> int:
+        if self.cfg.family == "vlm":
+            return seq_len - self.cfg.num_image_tokens
+        return seq_len
+
+    def _add_modality(self, specs: dict, b: int):
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, 1024), cfg.dtype()
+            )
+        if cfg.family == "audio":
+            specs["audio_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_ctx, cfg.d_model), cfg.dtype()
+            )
+
+    def make_inputs(self, key: jax.Array, shape: ShapeConfig) -> dict:
+        """Concrete random inputs matching input_specs (for tests/examples)."""
+        specs = self.input_specs(shape)
+        out = {}
+        for name, spec in specs.items():
+            key, sub = jax.random.split(key)
+            if spec.dtype == jnp.int32:
+                out[name] = jax.random.randint(
+                    sub, spec.shape, 0, self.cfg.vocab_size, jnp.int32
+                )
+            else:
+                out[name] = jax.random.normal(sub, spec.shape, spec.dtype)
+        return out
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILY:
+        raise KeyError(f"unknown family {cfg.family}")
+    return Model(cfg=cfg, module=_FAMILY[cfg.family])

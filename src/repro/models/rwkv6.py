@@ -1,0 +1,291 @@
+"""RWKV6 ("Finch") — attention-free token mixing with data-dependent
+per-channel decay. [arXiv:2404.05892]
+
+The WKV recurrence is elementwise state work (the paper's PE/VPU domain — the
+TE GEMM offload is inapplicable to this core, see DESIGN.md §4).  We run it as
+a chunked scan: outer ``lax.scan`` over chunks of ``cfg.rwkv_chunk`` steps
+with a rematerialized inner scan, bounding bwd-pass state storage to
+T/chunk state snapshots.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Param, stack_schemas
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+Params = Any
+
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def time_mix_schema(cfg: ModelConfig):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    pd = cfg.pdtype()
+    return {
+        "maa_x": Param((d,), ("embed",), init="zeros", dtype=pd),
+        # interpolation anchors for w,k,v,r,g
+        "maa_wkvrg": Param((5, d), (None, "embed"), init="zeros", dtype=pd),
+        "mix_w1": Param((d, 5 * LORA_MIX), ("embed", None), init="scaled", dtype=pd),
+        "mix_w2": Param((5, LORA_MIX, d), (None, None, "embed"), init="scaled", dtype=pd),
+        "decay_base": Param((d,), ("embed",), init="zeros", dtype=jnp.float32),
+        "decay_w1": Param((d, LORA_DECAY), ("embed", None), init="scaled", dtype=pd),
+        "decay_w2": Param((LORA_DECAY, d), (None, "embed"), init="scaled", dtype=pd),
+        "bonus": Param((h, hd), ("heads", "head_dim"), init="normal", scale=0.5, dtype=jnp.float32),
+        "wr": Param((d, d), ("embed", "mlp"), init="scaled", dtype=pd),
+        "wk": Param((d, d), ("embed", "mlp"), init="scaled", dtype=pd),
+        "wv": Param((d, d), ("embed", "mlp"), init="scaled", dtype=pd),
+        "wg": Param((d, d), ("embed", "mlp"), init="scaled", dtype=pd),
+        "wo": Param((d, d), ("mlp", "embed"), init="scaled", dtype=pd),
+        "ln_x_scale": Param((d,), ("embed",), init="ones", dtype=pd),
+        "ln_x_bias": Param((d,), ("embed",), init="zeros", dtype=pd),
+    }
+
+
+def channel_mix_schema(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    pd = cfg.pdtype()
+    return {
+        "maa_k": Param((d,), ("embed",), init="zeros", dtype=pd),
+        "maa_r": Param((d,), ("embed",), init="zeros", dtype=pd),
+        "wk": Param((d, f), ("embed", "mlp"), init="scaled", dtype=pd),
+        "wv": Param((f, d), ("mlp", "embed"), init="scaled", dtype=pd),
+        "wr": Param((d, d), ("embed", "embed"), init="scaled", dtype=pd),
+    }
+
+
+def block_schema(cfg: ModelConfig):
+    return {
+        "ln1": L.norm_schema(cfg),
+        "time_mix": time_mix_schema(cfg),
+        "ln2": L.norm_schema(cfg),
+        "channel_mix": channel_mix_schema(cfg),
+    }
+
+
+def schema(cfg: ModelConfig):
+    return {
+        "embed": L.embedding_schema(cfg),
+        "ln_emb": L.norm_schema(cfg),
+        "layers": stack_schemas(block_schema(cfg), cfg.num_layers),
+        "ln_f": L.norm_schema(cfg),
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array):
+    """x: (B,S,D); last: (B,1,D) — the previous token's x (state)."""
+    return jnp.concatenate([last, x[:, :-1, :]], axis=1)
+
+
+def wkv_scan(
+    r: jax.Array,  # (B, S, H, K)
+    k: jax.Array,  # (B, S, H, K)
+    v: jax.Array,  # (B, S, H, V)
+    w: jax.Array,  # (B, S, H, K) decay in (0,1)
+    u: jax.Array,  # (H, K) bonus
+    state: jax.Array,  # (B, H, K, V)
+    chunk: int,
+):
+    """Chunked recurrent WKV. Returns (out (B,S,H,V), final_state)."""
+    b, s, h, kd = r.shape
+    vd = v.shape[-1]
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    chunk = min(chunk, s)
+    s_orig = s
+    if s % chunk:  # pad with identity steps: k=v=r=0, decay w=1
+        pad = chunk - s % chunk
+        padfn = lambda t, val: jnp.pad(
+            t, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=val
+        )
+        r, k, v = padfn(r, 0.0), padfn(k, 0.0), padfn(v, 0.0)
+        w = padfn(w, 1.0)
+        s = s + pad
+    nc = s // chunk
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, nc, chunk, h, -1), 1, 0)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+
+    @jax.named_scope("vmem_fused_wkv")
+    def step(st, xs):
+        rt, kt, vt, wt = xs  # (B,H,K/V)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, u[None, :, :, None] * kv + st)
+        st = wt[..., None] * st + kv
+        return st, out
+
+    def chunk_fn(st, xs):
+        st, outs = jax.lax.scan(step, st, xs)
+        return st, outs
+
+    chunk_fn = jax.checkpoint(
+        chunk_fn, policy=jax.checkpoint_policies.nothing_saveable
+    )
+
+    def outer(st, xs):
+        rck, kck, vck, wck = xs  # (B,Q,H,*)
+        to_t = lambda t: jnp.moveaxis(t, 1, 0)  # (Q,B,H,*)
+        st, outs = chunk_fn(st, tuple(map(to_t, (rck, kck, vck, wck))))
+        return st, jnp.moveaxis(outs, 0, 1)  # (B,Q,H,V)
+
+    state, ys = jax.lax.scan(outer, state.astype(f32), (rc, kc, vc, wc))
+    out = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, vd)[:, :s_orig]
+    return out, state
+
+
+def time_mix(
+    p: Params, x: jax.Array, cfg: ModelConfig,
+    last_x: jax.Array, state: jax.Array, chunk: int,
+):
+    """RWKV6 time mixing. Returns (out, (new_last_x, new_state))."""
+    dt = cfg.dtype()
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    xprev = _token_shift(x, last_x)
+    xx = xprev - x
+    xxx = x + xx * p["maa_x"].astype(dt)
+    # data-dependent interpolation (ddlerp): (B,S,5,D)
+    mix = jnp.tanh(jnp.einsum("bsd,de->bse", xxx, p["mix_w1"].astype(dt)))
+    mix = mix.reshape(b, s, 5, LORA_MIX)
+    mix = jnp.einsum("bsme,med->bsmd", mix, p["mix_w2"].astype(dt))
+    anchors = p["maa_wkvrg"].astype(dt)[None, None]  # (1,1,5,D)
+    xi = x[:, :, None, :] + xx[:, :, None, :] * (anchors + mix)
+    xw, xk, xv, xr, xg = (xi[:, :, i, :] for i in range(5))
+
+    rv = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt))
+    kv_ = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt))
+    vv = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt))
+    gv = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt)))
+
+    dlora = jnp.einsum(
+        "bsd,de->bse", jnp.tanh(jnp.einsum("bsd,de->bse", xw, p["decay_w1"].astype(dt))),
+        p["decay_w2"].astype(dt),
+    )
+    logw = p["decay_base"][None, None, :] + dlora.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw.clip(-6.0, 2.0)))  # (B,S,D) in (0,1)
+
+    def heads(t):
+        return t.reshape(b, s, h, hd)
+
+    out, new_state = wkv_scan(
+        heads(rv), heads(kv_), heads(vv), heads(w), p["bonus"], state, chunk
+    )
+    out = out.reshape(b, s, d)
+    # per-head group norm
+    oh = out.reshape(b, s, h, hd)
+    mu = jnp.mean(oh, axis=-1, keepdims=True)
+    var = jnp.var(oh, axis=-1, keepdims=True)
+    oh = (oh - mu) * jax.lax.rsqrt(var + 64e-5)
+    out = oh.reshape(b, s, d).astype(dt)
+    out = out * p["ln_x_scale"].astype(dt) + p["ln_x_bias"].astype(dt)
+    out = out * gv
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
+    return out, (x[:, -1:, :], new_state)
+
+
+def channel_mix(p: Params, x: jax.Array, cfg: ModelConfig, last_x: jax.Array):
+    dt = cfg.dtype()
+    xprev = _token_shift(x, last_x)
+    xx = xprev - x
+    xk = x + xx * p["maa_k"].astype(dt)
+    xr = x + xx * p["maa_r"].astype(dt)
+    kv_ = jnp.square(
+        jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dt)))
+    )
+    out = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt))
+    ) * jnp.einsum("bsf,fd->bsd", kv_, p["wv"].astype(dt))
+    return out, x[:, -1:, :]
+
+
+def _block(lp, x, cfg, states, chunk):
+    """states: dict(tm_x (B,1,D), wkv (B,H,K,V), cm_x (B,1,D))."""
+    x = constrain(x, ("batch", "seq", "embed"))
+    h1 = L.apply_norm(lp["ln1"], x, cfg)
+    tm_out, (tm_x, wkv) = time_mix(
+        lp["time_mix"], h1, cfg, states["tm_x"], states["wkv"], chunk
+    )
+    x = x + tm_out
+    h2 = L.apply_norm(lp["ln2"], x, cfg)
+    cm_out, cm_x = channel_mix(lp["channel_mix"], h2, cfg, states["cm_x"])
+    x = x + cm_out
+    return x, {"tm_x": tm_x, "wkv": wkv, "cm_x": cm_x}
+
+
+def init_states(cfg: ModelConfig, batch_size: int):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    one = {
+        "tm_x": jnp.zeros((batch_size, 1, d), cfg.dtype()),
+        "wkv": jnp.zeros((batch_size, h, hd, hd), jnp.float32),
+        "cm_x": jnp.zeros((batch_size, 1, d), cfg.dtype()),
+    }
+    return jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (cfg.num_layers,) + t.shape), one
+    )
+
+
+def _run(params, cfg: ModelConfig, x, states, chunk):
+    def layer_fn(h, xs):
+        lp, st = xs
+        h, new_st = _block(lp, h, cfg, st, chunk)
+        return h, new_st
+
+    x, new_states = jax.lax.scan(
+        L.remat_wrap(layer_fn, cfg), x, (params["layers"], states)
+    )
+    return x, new_states
+
+
+def forward(params, cfg: ModelConfig, batch, return_hidden: bool = False):
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = L.apply_norm(params["ln_emb"], x, cfg)
+    states = init_states(cfg, b)
+    x, _ = _run(params, cfg, x, states, cfg.rwkv_chunk)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    if return_hidden:
+        return x, {}
+    return L.unembed(params["embed"], x, cfg), {}
+
+
+def unembed(params, x, cfg: ModelConfig):
+    return L.unembed(params["embed"], x, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    cache = init_states(cfg, batch_size)
+    cache["pos"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    tokens = batch["tokens"]
+    seq = tokens.shape[1]
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = L.apply_norm(params["ln_emb"], x, cfg)
+    states = {k: cache[k] for k in ("tm_x", "wkv", "cm_x")}
+    x, new_states = _run(params, cfg, x, states, cfg.rwkv_chunk)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.unembed(params["embed"], x[:, -1:, :], cfg)
+    new_states["pos"] = jnp.asarray(seq, jnp.int32)
+    return logits, new_states
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache):
+    x = L.embed_tokens(params["embed"], token, cfg)
+    x = L.apply_norm(params["ln_emb"], x, cfg)
+    states = {k: cache[k] for k in ("tm_x", "wkv", "cm_x")}
+    x, new_states = _run(params, cfg, x, states, chunk=1)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    new_states["pos"] = cache["pos"] + 1
+    return logits, new_states

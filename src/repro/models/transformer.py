@@ -1,0 +1,159 @@
+"""Dense decoder-only transformer (qwen / llama3 / smollm / command-r-plus)
+and the pixtral VLM backbone (stub patch embeddings prepended).
+
+Scan-over-layers with stacked parameters: compile time and HLO size are
+independent of depth; remat policy is applied to the scan body.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Param, stack_schemas
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+Params = Any
+
+
+def block_schema(cfg: ModelConfig):
+    sch = {
+        "ln1": L.norm_schema(cfg),
+        "attn": L.attention_schema(cfg),
+        "mlp": L.mlp_schema(cfg),
+    }
+    if not cfg.parallel_block:
+        sch["ln2"] = L.norm_schema(cfg)
+    return sch
+
+
+def schema(cfg: ModelConfig):
+    sch = {
+        "embed": L.embedding_schema(cfg),
+        "layers": stack_schemas(block_schema(cfg), cfg.num_layers),
+        "ln_f": L.norm_schema(cfg),
+    }
+    if cfg.family == "vlm":
+        sch["img_proj"] = Param(
+            (1024, cfg.d_model), (None, "embed"), init="scaled",
+            dtype=cfg.pdtype(),
+        )
+    return sch
+
+
+def _block(
+    lp: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+    cache_kv: Optional[tuple] = None, cache_pos=None,
+):
+    """One transformer block. Returns (x, new_kv or None)."""
+    x = constrain(x, ("batch", "seq", "embed"))
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    cache = None
+    if cache_kv is not None:
+        cache = {"k": cache_kv[0], "v": cache_kv[1]}
+    attn_out, new_cache = L.attention_layer(
+        lp["attn"], h, cfg, positions=positions, causal=True,
+        cache=cache, cache_pos=cache_pos,
+    )
+    if cfg.parallel_block:
+        # command-r style: attn and mlp read the same normed input
+        mlp_out = L.mlp_layer(lp["mlp"], h, cfg)
+        x = x + attn_out + mlp_out
+    else:
+        x = x + attn_out
+        h2 = L.apply_norm(lp["ln2"], x, cfg)
+        x = x + L.mlp_layer(lp["mlp"], h2, cfg)
+    new_kv = None if new_cache is None else (new_cache["k"], new_cache["v"])
+    return x, new_kv
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch, positions):
+    tokens = batch["tokens"]
+    x = L.embed_tokens(params["embed"], tokens, cfg, positions)
+    if cfg.family == "vlm" and batch.get("image_embeds") is not None:
+        img = jnp.einsum(
+            "bnv,vd->bnd", batch["image_embeds"].astype(cfg.dtype()),
+            params["img_proj"].astype(cfg.dtype()),
+        )
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch, return_hidden: bool = False):
+    """Full-sequence causal forward. Returns (logits | hidden, aux)."""
+    n_img = 0
+    if cfg.family == "vlm" and batch.get("image_embeds") is not None:
+        n_img = batch["image_embeds"].shape[1]
+    seq = batch["tokens"].shape[1] + n_img
+    positions = jnp.arange(seq, dtype=jnp.int32)
+    x = _embed_inputs(params, cfg, batch, positions[n_img:])
+
+    def layer_fn(h, lp):
+        h, _ = _block(lp, h, cfg, positions)
+        return h, None
+
+    x, _ = jax.lax.scan(L.remat_wrap(layer_fn, cfg), x, params["layers"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    x = x[:, n_img:, :]
+    if return_hidden:
+        return x, {}
+    return L.unembed(params["embed"], x, cfg), {}
+
+
+def unembed(params, x, cfg: ModelConfig):
+    return L.unembed(params["embed"], x, cfg)
+
+
+# -- serving ----------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    shape = (cfg.num_layers, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype()),
+        "v": jnp.zeros(shape, cfg.dtype()),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _layers_with_cache(params, cfg, x, positions, cache, cache_pos):
+    def layer_fn(h, xs):
+        lp, kc, vc = xs
+        h, new_kv = _block(lp, h, cfg, positions, cache_kv=(kc, vc),
+                           cache_pos=cache_pos)
+        return h, new_kv
+
+    x, (ks, vs) = jax.lax.scan(
+        L.remat_wrap(layer_fn, cfg), x,
+        (params["layers"], cache["k"], cache["v"]),
+    )
+    return x, ks, vs
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    """Process the full prompt, filling the cache. Returns (last_logits, cache)."""
+    n_img = 0
+    if cfg.family == "vlm" and batch.get("image_embeds") is not None:
+        n_img = batch["image_embeds"].shape[1]
+    seq = batch["tokens"].shape[1] + n_img
+    positions = jnp.arange(seq, dtype=jnp.int32)
+    x = _embed_inputs(params, cfg, batch, positions[n_img:])
+    x, ks, vs = _layers_with_cache(
+        params, cfg, x, positions, cache, jnp.zeros((), jnp.int32)
+    )
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.unembed(params["embed"], x[:, -1:, :], cfg)
+    return logits, {"k": ks, "v": vs, "pos": jnp.asarray(seq, jnp.int32)}
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache):
+    """One decode step. token: (B, 1) int32. Returns (logits, cache)."""
+    pos = cache["pos"]
+    positions = pos[None].astype(jnp.int32)
+    x = L.embed_tokens(params["embed"], token, cfg, positions)
+    x, ks, vs = _layers_with_cache(params, cfg, x, positions, cache, pos)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"k": ks, "v": vs, "pos": pos + 1}

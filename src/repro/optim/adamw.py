@@ -1,0 +1,79 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping. Pure JAX."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+PyTree = Any
+
+
+def lr_schedule(tc: TrainConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - tc.warmup_steps)
+        / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def init(params: PyTree) -> dict:
+    # moments always fp32 (params may be bf16: "low-precision params,
+    # full-precision optimizer state" — the production numeric policy)
+    zeros32 = lambda t: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), t
+    )
+    return {"mu": zeros32(params), "nu": zeros32(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def update(
+    grads: PyTree, opt_state: dict, params: PyTree, tc: TrainConfig
+) -> tuple[PyTree, dict, dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = lr_schedule(tc, step)
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    b1, b2, eps, wd = tc.beta1, tc.beta2, tc.eps, tc.weight_decay
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(opt_state["mu"])
+    flat_v = tdef.flatten_up_to(opt_state["nu"])
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, {"mu": new_m, "nu": new_v, "step": step}, metrics

@@ -1,0 +1,1 @@
+from repro.phy import classical, models, ofdm

@@ -1,0 +1,97 @@
+"""Classical wireless signal processing (paper §V-B PE workloads):
+CFFT, LS / MMSE channel estimation, MIMO-MMSE detection.
+
+These are the paper's "PEs are still precious" kernels — elementwise / small
+linear-algebra work that does not map to the tensor engines.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cfft(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Complex FFT (the PE CFFT kernel; paper Fig. 8)."""
+    return jnp.fft.fft(x, axis=axis)
+
+
+def cfft_radix2(x: jax.Array) -> jax.Array:
+    """Iterative radix-2 DIT FFT over the last axis (power-of-two length).
+
+    The explicit butterfly formulation that runs on the paper's PEs —
+    validated against jnp.fft in tests.
+    """
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, "radix-2 needs power-of-two length"
+    # bit reversal permutation
+    idx = jnp.arange(n)
+    bits = n.bit_length() - 1
+    rev = jnp.zeros_like(idx)
+    for b in range(bits):
+        rev = rev | (((idx >> b) & 1) << (bits - 1 - b))
+    y = x[..., rev].astype(jnp.complex64)
+    size = 2
+    while size <= n:
+        half = size // 2
+        tw = jnp.exp(-2j * jnp.pi * jnp.arange(half) / size)
+        y = y.reshape(*y.shape[:-1], n // size, size)
+        even = y[..., :half]
+        odd = y[..., half:] * tw
+        y = jnp.concatenate([even + odd, even - odd], axis=-1)
+        y = y.reshape(*y.shape[:-2], n)
+        size *= 2
+    return y
+
+
+def ls_channel_estimate(
+    y: jax.Array,  # (B, n_sym, n_sc) received grid
+    pilots: jax.Array,  # (n_sc,) known pilot symbols
+    pilot_mask: jax.Array,  # (n_sym, n_sc) bool
+    pilot_stride: int = 4,  # static pilot subcarrier spacing
+) -> jax.Array:
+    """LS estimate at pilots + linear interpolation across subcarriers.
+
+    Returns H_hat (B, n_sc) (channel flat in time within the slot).
+    """
+    # average LS estimates over pilot symbols
+    est = y / pilots[None, None, :]  # (B, n_sym, n_sc)
+    w = pilot_mask.astype(jnp.float32)[None]
+    h_p = jnp.sum(est * w, axis=1) / jnp.maximum(jnp.sum(w, axis=1), 1e-9)
+    # interpolate from the (static) pilot comb to all subcarriers
+    n_sc = y.shape[-1]
+    pos = jnp.arange(n_sc, dtype=jnp.float32)
+    p_idx = jnp.arange(0, n_sc, pilot_stride)
+    xp = pos[p_idx]
+    fp = h_p[:, p_idx]  # (B, n_p)
+    re = jax.vmap(lambda f: jnp.interp(pos, xp, f))(jnp.real(fp))
+    im = jax.vmap(lambda f: jnp.interp(pos, xp, f))(jnp.imag(fp))
+    return re + 1j * im
+
+
+def mmse_channel_estimate(
+    h_ls: jax.Array,  # (B, n_sc) LS estimate
+    noise_var: jax.Array,
+    corr_len: float = 16.0,
+) -> jax.Array:
+    """Wiener smoothing of the LS estimate with an exponential frequency
+    correlation model: H_mmse = R (R + sigma^2 I)^-1 H_ls."""
+    n_sc = h_ls.shape[-1]
+    d = jnp.abs(jnp.arange(n_sc)[:, None] - jnp.arange(n_sc)[None, :])
+    r = jnp.exp(-d / corr_len).astype(jnp.complex64)
+    a = r + noise_var * jnp.eye(n_sc, dtype=jnp.complex64)
+    w = jnp.linalg.solve(a, r).T  # (n_sc, n_sc)
+    return jnp.einsum("sk,bk->bs", w.T, h_ls)
+
+
+def mimo_mmse_detect(
+    y: jax.Array,  # (B, n_sc, n_rx)
+    h: jax.Array,  # (B, n_sc, n_rx, n_tx)
+    noise_var: jax.Array,
+) -> jax.Array:
+    """Per-subcarrier MMSE equalizer: x = (H^H H + s2 I)^-1 H^H y."""
+    n_tx = h.shape[-1]
+    hh = jnp.conj(jnp.swapaxes(h, -1, -2))  # (B, n_sc, n_tx, n_rx)
+    gram = jnp.einsum("bstr,bsru->bstu", hh, h)
+    a = gram + noise_var * jnp.eye(n_tx, dtype=h.dtype)
+    rhs = jnp.einsum("bstr,bsr->bst", hh, y)
+    return jnp.linalg.solve(a, rhs[..., None])[..., 0]  # (B, n_sc, n_tx)

@@ -1,0 +1,179 @@
+"""Neural AI-PHY models (paper §II survey):
+
+  DeepRxLite — fully-convolutional residual receiver (DeepRx [18] family):
+    input (Y grid, pilot LS estimates) -> bit LLRs for the whole slot.
+  CEViT     — attention-based channel estimator (CE-ViT [25] / MAT [26]
+    family): refines comb LS estimates into a full-grid channel estimate.
+
+Both are GEMM/conv-dominated — the workload class TensorPool's TEs target.
+Pure JAX, params via repro.common.params schemas.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Param, init_params
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# DeepRxLite: conv ResNet over the (symbols, subcarriers) grid
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeepRxConfig:
+    channels: int = 64
+    blocks: int = 4
+    bits_per_re: int = 4  # 16-QAM
+    in_features: int = 6  # Re/Im of Y, Re/Im of H_ls, pilot flag, noise
+
+
+def _conv_schema(cin, cout, k=3):
+    return {
+        "w": Param((k, k, cin, cout), (None, None, None, "mlp"), init="scaled"),
+        "b": Param((cout,), ("mlp",), init="zeros"),
+    }
+
+
+def deeprx_schema(cfg: DeepRxConfig):
+    c = cfg.channels
+    sch = {
+        "conv_in": _conv_schema(cfg.in_features, c),
+        "blocks": [
+            {"conv1": _conv_schema(c, c), "conv2": _conv_schema(c, c)}
+            for _ in range(cfg.blocks)
+        ],
+        "conv_out": _conv_schema(c, cfg.bits_per_re, k=1),
+    }
+    return sch
+
+
+def _conv2d(p, x):
+    return jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + p["b"]
+
+
+def deeprx_apply(params, cfg: DeepRxConfig, feats: jax.Array) -> jax.Array:
+    """feats: (B, n_sym, n_sc, in_features) -> LLRs (B, n_sym, n_sc, bits)."""
+    x = jax.nn.relu(_conv2d(params["conv_in"], feats))
+    for bp in params["blocks"]:
+        h = jax.nn.relu(_conv2d(bp["conv1"], x))
+        h = _conv2d(bp["conv2"], h)
+        x = jax.nn.relu(x + h)
+    return _conv2d(params["conv_out"], x)
+
+
+def deeprx_features(slot: dict, h_ls: jax.Array) -> jax.Array:
+    """Assemble the input feature grid from a simulated slot."""
+    y = slot["y"]  # (B, n_sym, n_sc)
+    b, n_sym, n_sc = y.shape
+    hls = jnp.broadcast_to(h_ls[:, None, :], y.shape)
+    pm = jnp.broadcast_to(slot["pilot_mask"][None], y.shape)
+    nv = jnp.broadcast_to(
+        slot["noise_var"].reshape(-1, *([1] * 2)), y.shape
+    ) if slot["noise_var"].ndim else jnp.full(y.shape, slot["noise_var"])
+    feats = jnp.stack(
+        [jnp.real(y), jnp.imag(y), jnp.real(hls), jnp.imag(hls),
+         pm.astype(jnp.float32), nv.astype(jnp.float32)],
+        axis=-1,
+    )
+    return feats
+
+
+# ---------------------------------------------------------------------------
+# CEViT: MHA-based channel estimator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CEViTConfig:
+    d_model: int = 128
+    heads: int = 4
+    layers: int = 4
+    d_ff: int = 256
+    patch: int = 4  # subcarriers per token
+    in_features: int = 4  # Re/Im of H_ls, pilot flag, noise
+
+
+def cevit_schema(cfg: CEViTConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    pin = cfg.patch * cfg.in_features
+    blocks = []
+    for _ in range(cfg.layers):
+        blocks.append({
+            "ln1": {"g": Param((d,), ("embed",), init="ones"),
+                    "b": Param((d,), ("embed",), init="zeros")},
+            "wqkv": Param((d, 3 * d), ("embed", "mlp"), init="scaled"),
+            "wo": Param((d, d), ("mlp", "embed"), init="scaled"),
+            "ln2": {"g": Param((d,), ("embed",), init="ones"),
+                    "b": Param((d,), ("embed",), init="zeros")},
+            "w1": Param((d, f), ("embed", "mlp"), init="scaled"),
+            "b1": Param((f,), ("mlp",), init="zeros"),
+            "w2": Param((f, d), ("mlp", "embed"), init="scaled"),
+            "b2": Param((d,), ("embed",), init="zeros"),
+        })
+    return {
+        "embed": Param((pin, d), (None, "embed"), init="scaled"),
+        "pos": Param((1024, d), (None, "embed"), init="normal", scale=0.02),
+        "blocks": blocks,
+        "head": Param((d, cfg.patch * 2), ("embed", None), init="scaled"),
+    }
+
+
+def _ln(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def cevit_apply(params, cfg: CEViTConfig, feats: jax.Array) -> jax.Array:
+    """feats: (B, n_sc, in_features) -> H_hat (B, n_sc) complex."""
+    b, n_sc, fin = feats.shape
+    n_tok = n_sc // cfg.patch
+    x = feats.reshape(b, n_tok, cfg.patch * fin)
+    x = x @ params["embed"] + params["pos"][:n_tok][None]
+    h_heads = cfg.heads
+    dh = cfg.d_model // h_heads
+    for bp in params["blocks"]:
+        hN = _ln(bp["ln1"], x)
+        qkv = hN @ bp["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, n_tok, h_heads, dh)
+        k = k.reshape(b, n_tok, h_heads, dh)
+        v = v.reshape(b, n_tok, h_heads, dh)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * (dh**-0.5)
+        p_attn = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p_attn, v).reshape(
+            b, n_tok, cfg.d_model
+        )
+        x = x + o @ bp["wo"]
+        hN = _ln(bp["ln2"], x)
+        x = x + (jax.nn.gelu(hN @ bp["w1"] + bp["b1"]) @ bp["w2"] + bp["b2"])
+    out = x @ params["head"]  # (B, n_tok, patch*2)
+    out = out.reshape(b, n_sc, 2)
+    return out[..., 0] + 1j * out[..., 1]
+
+
+def cevit_features(h_ls: jax.Array, pilot_sc: jax.Array,
+                   noise_var: jax.Array) -> jax.Array:
+    """(B, n_sc) LS estimate -> (B, n_sc, 4) input features."""
+    b, n_sc = h_ls.shape
+    pm = jnp.broadcast_to(pilot_sc[None], (b, n_sc)).astype(jnp.float32)
+    nv = jnp.full((b, n_sc), noise_var, jnp.float32)
+    return jnp.stack(
+        [jnp.real(h_ls), jnp.imag(h_ls), pm, nv], axis=-1
+    ).astype(jnp.float32)
+
+
+def init_deeprx(key, cfg: DeepRxConfig):
+    return init_params(deeprx_schema(cfg), key)
+
+
+def init_cevit(key, cfg: CEViTConfig):
+    return init_params(cevit_schema(cfg), key)

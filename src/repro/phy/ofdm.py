@@ -1,0 +1,138 @@
+"""OFDM uplink simulation substrate (paper §II domain).
+
+Resource grid, QAM mod/demod, Rayleigh TDL channel with exponential power
+delay profile, AWGN — everything needed to generate synthetic uplink slots
+for the classical chain and the neural receivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GridConfig:
+    n_subcarriers: int = 512  # frequency bins (REs per symbol)
+    n_symbols: int = 14  # OFDM symbols per slot (one TTI)
+    pilot_stride: int = 4  # pilot every k-th subcarrier
+    pilot_symbols: tuple = (2, 11)  # DMRS symbol positions
+    n_tx: int = 1
+    n_rx: int = 1
+    fft_size: int = 512
+    n_taps: int = 8  # channel delay taps
+    delay_spread: float = 2.0  # exponential PDP decay (in taps)
+
+
+def qam16_mod(bits: jax.Array) -> jax.Array:
+    """bits: (..., 4) -> complex symbol (gray-coded 16-QAM, unit power)."""
+    b = bits.astype(jnp.float32)
+    re = (2 * b[..., 0] - 1) * (2 - (2 * b[..., 1] - 1) * 1.0)
+    im = (2 * b[..., 2] - 1) * (2 - (2 * b[..., 3] - 1) * 1.0)
+    # gray mapping: levels in {-3,-1,1,3}/sqrt(10)
+    lv = jnp.array([-3.0, -1.0, 3.0, 1.0])
+    re = lv[(bits[..., 0] * 2 + bits[..., 1]).astype(jnp.int32)]
+    im = lv[(bits[..., 2] * 2 + bits[..., 3]).astype(jnp.int32)]
+    return (re + 1j * im) / jnp.sqrt(10.0)
+
+
+def qam16_demod_llr(y: jax.Array, noise_var: jax.Array) -> jax.Array:
+    """Max-log LLRs for gray 16-QAM. y: (...,) complex -> (..., 4).
+
+    Convention: llr = log P(b=1)/P(b=0); hard decision is ``llr > 0``.
+    """
+    s = jnp.sqrt(10.0)
+    yr, yi = jnp.real(y) * s, jnp.imag(y) * s
+    nv = jnp.maximum(noise_var * 10.0, 1e-6)
+
+    def llr_pair(u):
+        l0 = (jnp.minimum((u + 3) ** 2, (u + 1) ** 2)
+              - jnp.minimum((u - 3) ** 2, (u - 1) ** 2))
+        l1 = (jnp.minimum((u + 3) ** 2, (u - 3) ** 2)
+              - jnp.minimum((u + 1) ** 2, (u - 1) ** 2))
+        return l0, l1
+
+    r0, r1 = llr_pair(yr)
+    i0, i1 = llr_pair(yi)
+    return jnp.stack([r0, r1, i0, i1], axis=-1) / nv[..., None]
+
+
+def tdl_channel(key: jax.Array, cfg: GridConfig, batch: int) -> jax.Array:
+    """Rayleigh TDL -> frequency response H (batch, n_rx, n_tx, n_sc)."""
+    pdp = jnp.exp(-jnp.arange(cfg.n_taps) / cfg.delay_spread)
+    pdp = pdp / jnp.sum(pdp)
+    kr, ki = jax.random.split(key)
+    shape = (batch, cfg.n_rx, cfg.n_tx, cfg.n_taps)
+    taps = (jax.random.normal(kr, shape) + 1j * jax.random.normal(ki, shape))
+    taps = taps * jnp.sqrt(pdp / 2.0)
+    # frequency response: FFT of the tap vector zero-padded to fft_size
+    h = jnp.fft.fft(taps, n=cfg.fft_size, axis=-1)[..., : cfg.n_subcarriers]
+    return h  # (B, n_rx, n_tx, n_sc)
+
+
+def pilot_mask(cfg: GridConfig) -> jax.Array:
+    """(n_symbols, n_subcarriers) bool mask of pilot REs."""
+    m = jnp.zeros((cfg.n_symbols, cfg.n_subcarriers), bool)
+    sc = jnp.arange(cfg.n_subcarriers) % cfg.pilot_stride == 0
+    for sym in cfg.pilot_symbols:
+        m = m.at[sym].set(sc)
+    return m
+
+
+def make_slot(key: jax.Array, cfg: GridConfig, batch: int, snr_db: float):
+    """Simulate one uplink slot (SISO path of the grid).
+
+    Returns dict(y, x, h, bits, pilots, noise_var):
+      y (B, n_sym, n_sc) received grid, x transmitted symbols,
+      h (B, n_sc) channel (flat in time within the slot), bits (B, n_sym,
+      n_sc, 4).
+    """
+    kb, kc, kn = jax.random.split(key, 3)
+    bits = jax.random.bernoulli(
+        kb, 0.5, (batch, cfg.n_symbols, cfg.n_subcarriers, 4)
+    ).astype(jnp.int32)
+    x = qam16_mod(bits)  # (B, n_sym, n_sc)
+    h = tdl_channel(kc, cfg, batch)[:, 0, 0, :]  # (B, n_sc)
+    # pilots: known unit-power QPSK on the pilot mask
+    pm = pilot_mask(cfg)
+    pilots = jnp.exp(
+        1j * (jnp.pi / 4 + jnp.pi / 2 * (jnp.arange(cfg.n_subcarriers) % 4))
+    )
+    x = jnp.where(pm[None], pilots[None, None, :], x)
+    snr = 10.0 ** (snr_db / 10.0)
+    noise_var = 1.0 / snr
+    kn1, kn2 = jax.random.split(kn)
+    noise = (jax.random.normal(kn1, x.shape) + 1j * jax.random.normal(kn2, x.shape))
+    noise = noise * jnp.sqrt(noise_var / 2.0)
+    y = x * h[:, None, :] + noise
+    return {
+        "y": y, "x": x, "h": h, "bits": bits,
+        "pilots": pilots, "pilot_mask": pm,
+        "noise_var": jnp.asarray(noise_var, jnp.float32),
+    }
+
+
+def make_mimo_slot(key: jax.Array, cfg: GridConfig, batch: int, snr_db: float):
+    """MIMO flat-per-subcarrier slot for MMSE detection benchmarks.
+
+    Returns y (B, n_sc, n_rx), H (B, n_sc, n_rx, n_tx), x (B, n_sc, n_tx).
+    """
+    kb, kc, kn = jax.random.split(key, 3)
+    bits = jax.random.bernoulli(
+        kb, 0.5, (batch, cfg.n_subcarriers, cfg.n_tx, 4)
+    ).astype(jnp.int32)
+    x = qam16_mod(bits)  # (B, n_sc, n_tx)
+    h = tdl_channel(kc, cfg, batch)  # (B, n_rx, n_tx, n_sc)
+    h = jnp.moveaxis(h, -1, 1)  # (B, n_sc, n_rx, n_tx)
+    snr = 10.0 ** (snr_db / 10.0)
+    noise_var = cfg.n_tx / snr
+    kn1, kn2 = jax.random.split(kn)
+    nshape = (batch, cfg.n_subcarriers, cfg.n_rx)
+    noise = (jax.random.normal(kn1, nshape) + 1j * jax.random.normal(kn2, nshape))
+    noise = noise * jnp.sqrt(noise_var / 2.0)
+    y = jnp.einsum("bsrt,bst->bsr", h, x) + noise
+    return {
+        "y": y, "h": h, "x": x, "bits": bits,
+        "noise_var": jnp.asarray(noise_var, jnp.float32),
+    }

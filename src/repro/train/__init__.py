@@ -1,0 +1,7 @@
+from repro.train.step import (
+    make_train_step,
+    make_loss_fn,
+    init_state,
+    chunked_cross_entropy,
+)
+from repro.train.trainer import Trainer

@@ -1,0 +1,123 @@
+"""Fault-tolerant training driver.
+
+Features (single-host simulation of the multi-pod design):
+  * jit/pjit'd step with explicit param/opt/batch shardings, donated state
+  * checkpoint every N steps (async, atomic), auto-resume from latest
+  * preemption handling: SIGTERM/SIGINT triggers a final checkpoint + clean
+    exit with a resumable step counter
+  * deterministic data: batch is a pure function of (seed, step), so restart
+    (even elastically onto a different mesh) replays the exact stream
+  * step-time watchdog: logs straggler steps (> k x median)
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import TokenStream
+from repro.models.registry import Model
+from repro.train import step as step_lib
+
+PyTree = Any
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        tc: TrainConfig,
+        stream: TokenStream,
+        mesh=None,
+        state_shardings: Optional[PyTree] = None,
+        batch_shardings: Optional[dict] = None,
+        extra_batch: Optional[Callable[[int], dict]] = None,
+    ):
+        self.model = model
+        self.tc = tc
+        self.stream = stream
+        self.mesh = mesh
+        self.extra_batch = extra_batch
+        self._preempted = False
+        self.step_times: list[float] = []
+
+        step_fn = step_lib.make_train_step(model, tc)
+        jit_kwargs: dict = {"donate_argnums": (0,)}
+        if state_shardings is not None:
+            jit_kwargs["in_shardings"] = (state_shardings, batch_shardings)
+            jit_kwargs["out_shardings"] = (state_shardings, None)
+        self.step_fn = jax.jit(step_fn, **jit_kwargs)
+
+        self.ckpt = (
+            CheckpointManager(
+                tc.checkpoint_dir, keep=tc.keep_checkpoints,
+                async_save=tc.async_checkpoint,
+            )
+            if tc.checkpoint_dir
+            else None
+        )
+
+    # -- preemption ------------------------------------------------------------
+    def install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    # -- init / resume ----------------------------------------------------------
+    def init_or_resume(self, seed: int = 0) -> tuple[dict, int]:
+        start_step = 0
+        state = step_lib.init_state(self.model, jax.random.PRNGKey(seed))
+        if self.ckpt is not None:
+            latest = self.ckpt.latest_step()
+            if latest is not None:
+                state = self.ckpt.restore(latest, state)
+                start_step = latest
+        return state, start_step
+
+    # -- main loop ----------------------------------------------------------------
+    def run(self, state: dict, start_step: int, num_steps: int,
+            log_every: int = 10, log_fn=print):
+        metrics_hist = []
+        step = start_step
+        for step in range(start_step, start_step + num_steps):
+            t0 = time.perf_counter()
+            batch = self.stream.batch_at(step)
+            if self.extra_batch is not None:
+                batch = {**batch, **self.extra_batch(step)}
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            state, metrics = self.step_fn(state, batch)
+            metrics = jax.device_get(metrics)
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            # straggler watchdog
+            if len(self.step_times) > 5:
+                med = float(np.median(self.step_times[-50:]))
+                if dt > 3.0 * med:
+                    log_fn(f"[watchdog] step {step}: {dt:.2f}s > 3x median "
+                           f"{med:.2f}s (straggler)")
+            metrics_hist.append(metrics)
+            if step % log_every == 0:
+                log_fn(
+                    f"step {step}: loss={float(metrics['loss']):.4f} "
+                    f"ce={float(metrics['ce']):.4f} "
+                    f"gnorm={float(metrics['grad_norm']):.2f} {dt*1e3:.0f}ms"
+                )
+            if self.ckpt and (step + 1) % self.tc.checkpoint_every == 0:
+                self.ckpt.save(step + 1, state)
+            if self._preempted:
+                log_fn(f"[preempt] caught signal at step {step}; checkpointing")
+                if self.ckpt:
+                    self.ckpt.save(step + 1, state)
+                    self.ckpt.wait()
+                return state, step + 1, metrics_hist
+        if self.ckpt:
+            self.ckpt.save(step + 1, state)
+            self.ckpt.wait()
+        return state, step + 1, metrics_hist

@@ -1,0 +1,90 @@
+"""Kung-principle balance analysis: property tests (hypothesis) + the
+paper's own Eq. 1-6 numbers on the TensorPool machine model."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import balance
+from repro.core.machine import TENSORPOOL_N7, TPU_V5E
+
+
+def test_paper_eq1_l2_balance_n512():
+    """Paper §IV-A-1: double-buffered n=512 FP16 GEMM is L2-balanced
+    (compute time >= transfer time) at pi=8192 MACs/cyc, beta=1024 B/cyc."""
+    rep = balance.gemm_hbm_balance(512, dtype_bytes=2, machine=TENSORPOOL_N7)
+    assert rep.balanced
+    # paper Eq. 1 threshold: n^3/8192 >= 8n^2/1024  <=>  n >= 64
+    assert balance.gemm_hbm_balance(64, 2, TENSORPOOL_N7).balanced
+    assert not balance.gemm_hbm_balance(16, 2, TENSORPOOL_N7).balanced
+
+
+def test_paper_eq3_tile_intensity_bound():
+    """Paper Eq. 3: pi_TE/beta_loc = 256 MACs / 64 B = 4 <= 8 MACs/B.
+
+    Our BalanceReport expresses the same inequality as arithmetic intensity
+    vs critical intensity for one TE against its local port.
+    """
+    # single TE: 512 GFLOP/s (256 MACs/cycle), 64 B/cycle port @ 1 GHz
+    from repro.core.machine import Machine
+
+    te = Machine("one-te", peak_flops=512e9, hbm_bw=64e9,
+                 link_bw=64e9, fast_mem_bytes=64 * 1024)
+    # large-n inner loop: Wk = 1024n MACs, Qm = 128n B (paper Eq. 2)
+    n = 4096
+    rep = balance.kung(2.0 * 1024 * n, 128.0 * n, te)
+    assert rep.balanced
+    assert rep.critical_intensity == pytest.approx(8.0)  # FLOP/B = 2x4 MACs/B
+
+
+@given(
+    bm=st.sampled_from([128, 256, 512]),
+    bn=st.sampled_from([128, 256, 512]),
+    bk=st.sampled_from([128, 256, 512]),
+)
+@settings(max_examples=30, deadline=None)
+def test_tile_balance_monotone_in_bk(bm, bn, bk):
+    """Growing the contraction block only improves arithmetic intensity."""
+    r1 = balance.gemm_tile_balance(bm, bn, bk, 2, TPU_V5E)
+    r2 = balance.gemm_tile_balance(bm, bn, 2 * bk, 2, TPU_V5E)
+    assert r2.arithmetic_intensity >= r1.arithmetic_intensity * 0.99
+
+
+@given(n=st.integers(min_value=16, max_value=8192))
+@settings(max_examples=50, deadline=None)
+def test_hbm_balance_threshold_exists(n):
+    """Balance is monotone in n: once balanced, larger n stays balanced."""
+    r = balance.gemm_hbm_balance(n, 2, TPU_V5E)
+    r2 = balance.gemm_hbm_balance(2 * n, 2, TPU_V5E)
+    if r.balanced:
+        assert r2.balanced
+    # AI = 2n^3 / 8n^2 = n/4 FLOP per byte
+    assert r.arithmetic_intensity == pytest.approx(n / 4.0)
+
+
+@given(
+    lat=st.floats(min_value=1e-9, max_value=1e-3),
+    comp=st.floats(min_value=1e-9, max_value=1e-3),
+)
+@settings(max_examples=50, deadline=None)
+def test_outstanding_buffers(lat, comp):
+    nbuf = balance.outstanding_buffers_needed(lat, comp)
+    assert nbuf >= 2  # always at least double-buffered
+    assert (nbuf - 1) * comp >= lat - 1e-12  # latency actually covered
+
+
+def test_vmem_footprint_accounts_buffers():
+    b2 = balance.tile_vmem_bytes(128, 128, 128, 2, n_buffers=2)
+    b4 = balance.tile_vmem_bytes(128, 128, 128, 2, n_buffers=4)
+    assert b4 > b2
+    # accumulator is fp32
+    assert b2 >= 4 * 128 * 128
+
+
+def test_sharded_gemm_ici_balance():
+    """TP-sharded GEMM: large-enough M makes the ICI gather hide (Eq. 4-6
+    analogue); tiny M cannot hide it."""
+    big = balance.sharded_gemm_ici_balance(65536, 14336, 4096, 2, TPU_V5E, 16)
+    small = balance.sharded_gemm_ici_balance(64, 14336, 4096, 2, TPU_V5E, 16)
+    assert big.balanced
+    assert not small.balanced

@@ -1,0 +1,51 @@
+"""Gradient compression: codec bounds + error-feedback convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import compression as C
+
+
+@given(scale=st.floats(min_value=1e-3, max_value=1e3))
+@settings(max_examples=20, deadline=None)
+def test_int8_quantization_error_bound(scale):
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,)) * scale
+    q, s = C.int8_encode(g)
+    dec = C.int8_decode(q, s)
+    max_err = float(jnp.max(jnp.abs(dec - g)))
+    assert max_err <= float(s) * 0.5 + 1e-6  # half-ulp of the quantizer
+
+
+def test_topk_keeps_largest():
+    g = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
+    m = C.topk_mask(g, 0.4)  # keep 2
+    assert bool(m[1]) and bool(m[3])
+    assert float(jnp.sum(m)) == 2
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Sum of compressed grads + final error == sum of true grads (EF
+    telescopes: nothing is ever lost, only delayed)."""
+    key = jax.random.PRNGKey(1)
+    grads = [jax.random.normal(jax.random.PRNGKey(i), (64,)) * 0.1
+             for i in range(20)]
+    err = jnp.zeros((64,))
+    sent = jnp.zeros((64,))
+    for g in grads:
+        dec, err = C.compress_leaf(g, err, "topk", topk_fraction=0.1)
+        sent = sent + dec
+    total = sum(grads)
+    np.testing.assert_allclose(
+        np.asarray(sent + err), np.asarray(total), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_compress_grads_tree():
+    params = {"a": jnp.ones((8, 8)), "b": jnp.ones((4,))}
+    err = C.init_error_state(params)
+    grads = jax.tree.map(lambda p: p * 0.01, params)
+    dec, new_err = C.compress_grads(grads, err, "int8")
+    assert jax.tree.structure(dec) == jax.tree.structure(grads)
+    for d, g in zip(jax.tree.leaves(dec), jax.tree.leaves(grads)):
+        np.testing.assert_allclose(np.asarray(d), np.asarray(g), atol=1e-3)

@@ -1,0 +1,103 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas (interpret) vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.te_gemm import pick_block_shape
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=5e-4
+    )
+
+
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 256, 384),
+                                   (512, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("epilogue", ["none", "relu", "silu"])
+def test_te_gemm_sweep(m, n, k, dtype, epilogue):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = _rand(k1, (m, k), dtype)
+    w = _rand(k2, (k, n), dtype)
+    b = _rand(k3, (n,), dtype)
+    out = ops.te_gemm(x, w, b, epilogue=epilogue, block_shape=(128, 128, 128))
+    expect = ref.te_gemm_ref(x, w, b, epilogue)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        **_tol(dtype),
+    )
+
+
+def test_te_gemm_softmax_epilogue():
+    k1, k2 = jax.random.split(KEY)
+    x = _rand(k1, (256, 256), jnp.float32)
+    w = _rand(k2, (256, 256), jnp.float32)
+    out = ops.te_gemm(x, w, None, epilogue="softmax",
+                      block_shape=(128, 256, 128))
+    expect = ref.te_gemm_ref(x, w, None, "softmax")
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=5e-5)
+    np.testing.assert_allclose(np.sum(out, -1), 1.0, rtol=1e-5)
+
+
+def test_pick_block_shape_alignment_and_vmem():
+    from repro.core.balance import tile_vmem_bytes
+    from repro.core.machine import TPU_V5E
+
+    for m, n, k in [(4096, 4096, 4096), (512, 14336, 4096), (128, 128, 128)]:
+        bm, bn, bk = pick_block_shape(m, n, k, 2)
+        assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+        assert tile_vmem_bytes(bm, bn, bk, 2) <= TPU_V5E.fast_mem_bytes // 2
+
+
+@pytest.mark.parametrize("sq,sk", [(128, 128), (256, 256), (128, 384)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mha_sweep(sq, sk, causal, dtype):
+    if causal and sq != sk:
+        pytest.skip("causal requires square for this mask convention")
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (4, sq, 64), dtype)
+    k = _rand(k2, (4, sk, 64), dtype)
+    v = _rand(k3, (4, sk, 64), dtype)
+    out = ops.mha(q, k, v, causal=causal)
+    expect = ref.mha_ref(q, k, v, causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        **_tol(dtype),
+    )
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 512), (256, 384, 512)])
+def test_fc_softmax(m, k, n):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = _rand(k1, (m, k), jnp.float32)
+    w = _rand(k2, (k, n), jnp.float32)
+    b = _rand(k3, (n,), jnp.float32)
+    out = ops.fc_softmax(x, w, b)
+    np.testing.assert_allclose(
+        out, ref.fc_softmax_ref(x, w, b), rtol=2e-4, atol=5e-5
+    )
+
+
+@pytest.mark.parametrize("h,w,c,f", [(16, 8, 128, 128), (32, 16, 256, 128)])
+def test_dwconv_block(h, w, c, f):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    xp = _rand(k1, (2, h + 2, w + 2, c), jnp.float32)
+    dw = _rand(k2, (3, 3, c), jnp.float32) * 0.2
+    pw = _rand(k3, (c, f), jnp.float32) * 0.1
+    gamma = jnp.ones((f,))
+    beta = jnp.zeros((f,))
+    out = ops.dwconv_block(xp, dw, pw, gamma, beta)
+    expect = ref.dwconv_block_ref(xp, dw, pw, gamma, beta)
+    np.testing.assert_allclose(out, expect, rtol=5e-4, atol=5e-4)
+    assert bool(jnp.all(out >= 0))  # ReLU'd

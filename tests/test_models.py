@@ -1,0 +1,115 @@
+"""Architecture smoke tests: all 10 assigned archs, reduced configs.
+
+Forward (shapes + finiteness), prefill/decode vs teacher-forced consistency,
+MoE no-drop equivalence, gradient flow.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.models import get_model
+
+KEY = jax.random.PRNGKey(0)
+SC = ShapeConfig("t", 17, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_smoke(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    batch = model.make_inputs(KEY, SC)
+    logits, aux = model.forward(params, batch)
+    text_len = batch["tokens"].shape[1]
+    assert logits.shape == (2, text_len, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """decode(prefill(t[:-1]), t[-1]) must match prefill(t) last logits."""
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    batch = model.make_inputs(KEY, SC)
+    toks = batch["tokens"]
+    cache_a = model.init_cache(2, 64)
+    full_logits, _ = model.prefill(params, batch, cache_a)
+    cache_b = model.init_cache(2, 64)
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :-1]
+    _, cache_b = model.prefill(params, pre, cache_b)
+    dec_logits, _ = model.decode_step(params, toks[:, -1:], cache_b)
+    err = float(jnp.max(jnp.abs(dec_logits[:, 0] - full_logits[:, 0])))
+    scale = float(jnp.max(jnp.abs(full_logits))) + 1e-6
+    assert err / scale < 1e-3, f"{arch}: decode/prefill mismatch {err}"
+
+
+@pytest.mark.parametrize("arch", ["dbrx-132b", "moonshot-v1-16b-a3b"])
+def test_moe_nodrop_forward_equals_prefill(arch):
+    """With capacity >= worst case, train fwd == serving prefill exactly."""
+    cfg = get_smoke_config(arch).replace(
+        capacity_factor=float(get_smoke_config(arch).num_experts)
+    )
+    model = get_model(cfg)
+    params = model.init(KEY)
+    batch = model.make_inputs(KEY, SC)
+    logits, _ = model.forward(params, batch)
+    cache = model.init_cache(2, 64)
+    pre_logits, _ = model.prefill(params, batch, cache)
+    err = float(jnp.max(jnp.abs(pre_logits[:, 0] - logits[:, -1])))
+    assert err < 1e-4
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "zamba2-7b", "rwkv6-1.6b",
+                                  "dbrx-132b"])
+def test_gradients_flow(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    batch = model.make_inputs(KEY, SC)
+
+    def loss(p):
+        logits, aux = model.forward(p, batch)
+        l = jnp.mean(jnp.square(logits.astype(jnp.float32)))
+        return l + sum(aux.values()) if aux else l
+
+    grads = jax.grad(loss)(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves)
+    nonzero = sum(bool(jnp.any(g != 0)) for g in leaves)
+    assert nonzero > len(leaves) * 0.5, "most params should receive gradient"
+
+
+def test_full_configs_param_counts():
+    """The full configs match their published parameter scales (rough)."""
+    from repro.common.params import count_params
+
+    expected = {
+        "llama3-8b": (7.5e9, 9.0e9),
+        "qwen1.5-0.5b": (0.4e9, 0.7e9),
+        "smollm-360m": (0.3e9, 0.45e9),
+        "command-r-plus-104b": (95e9, 115e9),
+        "dbrx-132b": (120e9, 140e9),
+        # the assigned config line (48L x 64e x d_ff 1408) yields ~29B total;
+        # its *active* params (top-6 of 64 experts) are ~3.9B = the "A3B"
+        "moonshot-v1-16b-a3b": (25e9, 32e9),
+        "zamba2-7b": (6e9, 9e9),
+        "rwkv6-1.6b": (1.3e9, 2.2e9),
+        "whisper-tiny": (25e6, 60e6),
+        "pixtral-12b": (11e9, 14e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        cfg = get_config(arch)
+        n = count_params(get_model(cfg).schema())
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of [{lo},{hi}]"
+
+
+def test_long_context_applicability():
+    from repro.configs import applicable_shapes
+
+    subq = {a for a in ARCH_IDS
+            if "long_500k" in applicable_shapes(get_config(a))}
+    assert subq == {"zamba2-7b", "rwkv6-1.6b"}

@@ -1,0 +1,110 @@
+"""Sharding rules: divisibility fallback, axis-reuse guard, cache specs."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import sharding as shd
+from repro.models import get_model
+
+
+class FakeMesh:
+    """Shape-only stand-in so spec tests don't need 256 devices."""
+
+    def __init__(self, shape, axes):
+        self.axis_names = axes
+        self.devices = np.empty(shape, dtype=object)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH_MP = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_param_rules_basic():
+    # (embed, mlp) weight: FSDP over data, TP over model
+    spec = shd.spec_for((4096, 14336), ("embed", "mlp"), shd.PARAM_RULES, MESH)
+    assert spec == P("data", "model")
+
+
+def test_divisibility_fallback_kv_heads():
+    # kv_heads=8 on a 16-way model axis -> replicated (GQA-TP fallback)
+    spec = shd.spec_for(
+        (4096, 8, 128), ("embed", "kv_heads", "head_dim"),
+        shd.PARAM_RULES, MESH,
+    )
+    assert spec == P("data", None, None)
+
+
+def test_axis_reuse_guard():
+    # expert and mlp both want 'model'; expert wins (first dim), mlp dropped
+    spec = shd.spec_for(
+        (16, 6144, 10752), ("expert", "embed", "mlp"), shd.PARAM_RULES, MESH
+    )
+    assert spec == P("model", "data", None)
+
+
+def test_batch_sharding_multipod():
+    spec = shd.spec_for((256, 4096), ("batch", "seq"), shd.ACT_RULES, MESH_MP)
+    assert spec == P(("pod", "data"), None)
+    # batch=1 (long_500k): batch drops, kv_seq claims data+model
+    spec2 = shd.spec_for(
+        (13, 1, 524288, 32, 112),
+        ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        shd.ACT_RULES, MESH_MP,
+    )
+    assert spec2 == P(None, None, ("data", "model"), None, None)
+    # batch=128 decode: batch takes (pod,data), kv_seq only model
+    spec3 = shd.spec_for(
+        (32, 128, 32768, 8, 128),
+        ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        shd.ACT_RULES, MESH_MP,
+    )
+    assert spec3 == P(None, ("pod", "data"), "model", None, None)
+
+
+def test_cache_axes_cover_all_families():
+    for arch in ("llama3-8b", "zamba2-7b", "rwkv6-1.6b", "whisper-tiny"):
+        from repro.configs import get_smoke_config
+
+        cfg = get_smoke_config(arch)
+        model = get_model(cfg)
+        cache = jax.eval_shape(lambda: model.init_cache(2, 32))
+        axes = shd.cache_axes(cfg, cache)
+        for k, v in cache.items():
+            assert len(axes[k]) == len(v.shape), f"{arch}:{k}"
+
+
+def test_constrain_noop_without_mesh():
+    import jax.numpy as jnp
+
+    x = jnp.ones((4, 8))
+    assert shd.constrain(x, ("batch", "embed")) is x
+
+
+def test_serve_tp_rules_no_data_axis_on_params():
+    # decode weights must be resident: no FSDP (data) axis anywhere
+    spec = shd.spec_for((4096, 14336), ("embed", "mlp"),
+                        shd.PARAM_RULES_SERVE, MESH)
+    assert spec == P(None, "model")
+    spec2 = shd.spec_for(
+        (16, 6144, 10752), ("expert", "embed", "mlp"),
+        shd.PARAM_RULES_SERVE, MESH,
+    )
+    assert spec2 == P("model", None, None)
+
+
+def test_fsdp_rules_2d_weight_sharding():
+    spec = shd.spec_for((4096, 14336), ("embed", "mlp"),
+                        shd.PARAM_RULES_FSDP, MESH)
+    assert spec == P(("data", "model"), None)
+    # batch goes over every axis in fsdp activations
+    bspec = shd.spec_for((256, 4096), ("batch", "seq"),
+                         shd.ACT_RULES_FSDP, MESH)
+    assert bspec == P(("data", "model"), None)
+
+
+def test_sp_rules_seq_over_model():
+    spec = shd.spec_for((16, 4096, 4096), ("batch", "seq", "embed"),
+                        shd.ACT_RULES_SP, MESH)
+    assert spec == P("data", "model", None)
