@@ -1,76 +1,74 @@
-"""Paper §II: the end-to-end AI-PHY budget — classical uplink chain and a
-neural channel estimator must fit the 1 ms TTI on the modeled TensorPool
-(>= 6 TFLOPS requirement), and the models must fit the 4 MiB L1.
+"""Paper §II: the end-to-end AI-PHY budget on the receiver-pipeline
+subsystem — every registered receiver must fit the 1 ms TTI on the modeled
+TensorPool (>= 6 TFLOPS requirement), the neural models must fit the
+4 MiB L1, and the serve engine reports measured slots/sec with per-stage
+TE/PE/DMA cycle attribution.
 """
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_jit
-from repro.common.params import count_params, tree_size_bytes
+from benchmarks.common import emit
+from repro.common.params import tree_size_bytes
 from repro.core import pool
-from repro.core.machine import TENSORPOOL_N7
-from repro.phy import classical, models, ofdm
+from repro.phy import build_pipeline
+from repro.phy.scenarios import get_scenario
+from repro.serve import PhyServeEngine
 
 KEY = jax.random.PRNGKey(0)
 
+# (receiver, scenario) pairs spanning modulations, SISO + MIMO, Doppler
+CASES = [
+    ("classical", "siso-qpsk-snr5"),
+    ("classical", "siso-qam64-snr24"),
+    ("classical", "siso-qam16-doppler"),
+    ("classical", "mimo4x8-qam16-snr12"),
+    ("deeprx", "siso-qam16-snr12"),
+    ("deeprx", "mimo2x2-qam16-snr16"),
+    ("cevit", "siso-qam16-snr12"),
+    ("cevit", "mimo2x2-qpsk-snr8"),
+]
+
+BATCH = 4
+N_USERS = 8
+
 
 def main():
-    gcfg = ofdm.GridConfig(n_subcarriers=512, fft_size=512)
-
-    # classical uplink: CFFT -> LS-CHE -> equalize -> demod (one slot)
-    @jax.jit
-    def classical_chain(y_time, slot_y, nv):
-        y = classical.cfft(y_time)
-        h = classical.ls_channel_estimate(
-            slot_y, jnp.exp(1j * jnp.zeros(512)), ofdm.pilot_mask(gcfg),
-            gcfg.pilot_stride,
+    for kind, scn_name in CASES:
+        scn = get_scenario(scn_name)
+        rx = build_pipeline(kind, scn)
+        engine = PhyServeEngine(rx, batch_size=BATCH)
+        engine.submit_traffic(KEY, N_USERS)
+        rep = engine.run()
+        us_per_slot = 1e6 / max(rep.slots_per_sec, 1e-9)
+        tti = rep.tti
+        quality = (f"ber={rep.ber:.4f}" if rep.ber is not None else "")
+        emit(
+            f"phy_e2e/{kind}/{scn_name}", us_per_slot,
+            f"slots_per_sec={rep.slots_per_sec:.1f} {quality} "
+            f"tensorpool_concurrent_ms={tti['concurrent_ms']:.4f} "
+            f"tti_util={tti['tti_utilization']:.3f} "
+            f"within_tti={tti['fits_tti']}",
         )
-        xeq = slot_y / jnp.where(jnp.abs(h[:, None]) < 1e-3, 1.0, h[:, None])
-        return ofdm.qam16_demod_llr(xeq, nv)
-
-    slot = ofdm.make_slot(KEY, gcfg, batch=1, snr_db=10.0)
-    y_time = jax.random.normal(KEY, (14, 512)) + 1j * jax.random.normal(
-        jax.random.PRNGKey(1), (14, 512))
-    us = time_jit(classical_chain, y_time, slot["y"], slot["noise_var"])
-    flops = 14 * 5 * 512 * 9 + 8 * 512 * 14 + 6 * 14 * 512 * 4
-    ms = pool.pe_cycles(flops, ipc=0.7) / 1e6
-    emit("phy_e2e/classical_chain", us,
-         f"tensorpool_ms={ms:.3f} within_tti={ms < 1.0}")
-
-    # neural CHE (CE-ViT class): FLOPs -> TensorPool TE runtime
-    mcfg = models.CEViTConfig(d_model=128, heads=4, layers=4, d_ff=256,
-                              patch=4)
-    params = models.init_cevit(KEY, mcfg)
-    n_tok = 512 // mcfg.patch
-    # per-slot FLOPs: 4 layers x (attn + mlp) over n_tok tokens
-    flops = mcfg.layers * (
-        2 * n_tok * mcfg.d_model * 4 * mcfg.d_model  # qkv+o projections
-        + 2 * 2 * n_tok * n_tok * mcfg.d_model  # scores + pv
-        + 2 * 2 * n_tok * mcfg.d_model * mcfg.d_ff  # mlp
-    )
-    te_ms = flops / 2 / (pool.N_TES * pool.TE_MACS_PER_CYCLE * 0.67) / 1e6
-    pbytes = tree_size_bytes(jax.tree.map(
-        lambda x: x.astype(jnp.float16), params))
-    feats = jnp.zeros((1, 512, 4))
-    us = time_jit(jax.jit(lambda p, f: models.cevit_apply(p, mcfg, f)),
-                  params, feats)
-    emit("phy_e2e/cevit_che", us,
-         f"tensorpool_ms={te_ms:.4f} within_tti={te_ms < 1.0} "
-         f"params_fp16_KiB={pbytes/1024:.0f} fits_4MiB_L1={pbytes < 4<<20}")
-
-    # DeepRx-lite full receiver: FLOPs vs the paper's >= 6 TFLOPS bound
-    dcfg = models.DeepRxConfig(channels=64, blocks=4)
-    dparams = models.init_deeprx(KEY, dcfg)
-    grid = 14 * 512
-    conv_flops = 2 * grid * 9 * (
-        dcfg.in_features * 64 + dcfg.blocks * 2 * 64 * 64) + 2 * grid * 64 * 4
-    te_ms = conv_flops / 2 / (pool.N_TES * pool.TE_MACS_PER_CYCLE * 0.67) / 1e6
-    req_tflops = conv_flops / 1e-3 / 1e12  # to finish within 1 ms
-    pbytes = tree_size_bytes(jax.tree.map(
-        lambda x: x.astype(jnp.float16), dparams))
-    emit("phy_e2e/deeprx_receiver", 0.0,
-         f"tensorpool_ms={te_ms:.3f} required_tflops_for_tti={req_tflops:.2f} "
-         f"params_fp16_KiB={pbytes/1024:.0f} fits_4MiB_L1={pbytes < 4<<20}")
+        # per-stage TensorPool attribution (the paper's TE/PE split)
+        for name, c in rep.stage_cycles.items():
+            emit(
+                f"phy_e2e/{kind}/{scn_name}/stage/{name}", 0.0,
+                f"te_kcyc={c.te_cycles/1e3:.1f} "
+                f"pe_kcyc={c.pe_cycles/1e3:.1f} "
+                f"dma_kcyc={c.dma_cycles/1e3:.1f}",
+            )
+        # neural models: paper §II L1-fit and peak-compute requirements
+        if rx.params is not None:
+            pbytes = tree_size_bytes(jax.tree.map(
+                lambda x: x.astype(jnp.float16), rx.params))
+            te_flops = (rx.total_cycles().te_cycles
+                        * pool.N_TES * pool.TE_MACS_PER_CYCLE * 0.67 * 2)
+            emit(
+                f"phy_e2e/{kind}/{scn_name}/model", 0.0,
+                f"params_fp16_KiB={pbytes/1024:.0f} "
+                f"fits_4MiB_L1={pbytes < 4<<20} "
+                f"required_tflops_for_tti={te_flops/1e-3/1e12:.2f}",
+            )
 
 
 if __name__ == "__main__":

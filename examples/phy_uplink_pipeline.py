@@ -1,69 +1,53 @@
-"""The paper's target workload end to end: a 5G+ uplink slot through the
-classical chain and its AI-native replacements, with the TensorPool cycle
-model reporting where each stage would run (TEs vs PEs) and the 1 ms TTI
-budget.
+"""The paper's target workload end to end, on the unified receiver-pipeline
+subsystem: classical and AI-native uplink receive chains over registered
+link scenarios, with per-stage TensorPool cycle attribution and the 1 ms
+TTI budget, plus batched multi-user serving.
 
     PYTHONPATH=src python examples/phy_uplink_pipeline.py
 """
 import jax
-import jax.numpy as jnp
 
-from repro.core import pool
-from repro.phy import classical, models, ofdm
+from repro.phy import build_pipeline, get_scenario, slot_metrics
+from repro.phy.scenarios import all_scenarios
+from repro.serve import PhyServeEngine
 
 
 def main():
-    gcfg = ofdm.GridConfig(n_subcarriers=512, fft_size=512, n_tx=4, n_rx=8)
+    print("=== registered link scenarios ===")
+    for s in all_scenarios():
+        g = s.grid
+        print(f"  {s.name:24s} {s.modulation:5s} {g.n_tx}x{g.n_rx} "
+              f"snr={s.snr_db:4.1f}dB  {s.description}")
+
+    scn = get_scenario("mimo2x2-qam16-snr16")
     key = jax.random.PRNGKey(0)
-    print("=== uplink slot: 512 subcarriers x 14 symbols, 4x8 MIMO ===")
+    slot = scn.make_batch(key, batch=4)
+    print(f"\n=== {scn.name}: one slot batch through all three receivers "
+          f"===")
+    for kind in ("classical", "deeprx", "cevit"):
+        rx = build_pipeline(kind, scn)
+        state = rx.run(slot)
+        m = {k: float(v) for k, v in slot_metrics(state, scn).items()}
+        metrics = "  ".join(f"{k}={v:.4f}" for k, v in m.items())
+        print(f"\n{rx.name}:  {metrics}")
+        print("  stage              engine     TE kcyc    PE kcyc   DMA kcyc")
+        for name, c in rx.stage_cycles().items():
+            eng = next(s.compute for s in rx.stages if s.name == name)
+            print(f"  {name:18s} {eng:6s} {c.te_cycles/1e3:10.1f} "
+                  f"{c.pe_cycles/1e3:10.1f} {c.dma_cycles/1e3:10.1f}")
+        rep = rx.tti_report(batch=4)
+        print(f"  TTI (batch=4): sequential={rep['sequential_ms']:.3f} ms  "
+              f"concurrent={rep['concurrent_ms']:.3f} ms  "
+              f"utilization={rep['tti_utilization']:.3f}  "
+              f"fits={rep['fits_tti']}")
+        # note: neural receivers here are untrained (BER ~ 0.5); see
+        # examples/train_neural_receiver.py for the trained comparison.
 
-    # 1. classical chain (PE work on TensorPool)
-    slot = ofdm.make_slot(key, gcfg, batch=1, snr_db=8.0)
-    h_ls = classical.ls_channel_estimate(
-        slot["y"], slot["pilots"], slot["pilot_mask"], gcfg.pilot_stride
-    )
-    h_mmse = classical.mmse_channel_estimate(h_ls, slot["noise_var"])
-    mse = lambda h: float(jnp.mean(jnp.abs(h - slot["h"]) ** 2))
-    print(f"LS CHE mse={mse(h_ls):.4f}  MMSE CHE mse={mse(h_mmse):.4f}")
-
-    mimo = ofdm.make_mimo_slot(key, gcfg, batch=1, snr_db=12.0)
-    xhat = classical.mimo_mmse_detect(mimo["y"], mimo["h"], mimo["noise_var"])
-    llr = ofdm.qam16_demod_llr(xhat, mimo["noise_var"])
-    ber = float(jnp.mean((llr > 0).astype(jnp.int32) != mimo["bits"]))
-    print(f"MIMO-MMSE detection BER={ber:.4f}")
-
-    # TensorPool budget: which engine runs what, and the TTI check
-    pe_ms = pool.pe_cycles(8 * 512 * 4 * (2 / 3 * 64 + 2 * 32 + 8) * 8,
-                           ipc=0.59) / 1e6
-    print(f"classical chain on PEs: ~{pe_ms:.3f} ms of 1 ms TTI")
-
-    # 2. AI-native CHE (TE work): untrained here — see
-    #    examples/train_neural_receiver.py for the trained comparison
-    mcfg = models.CEViTConfig(d_model=128, heads=4, layers=4, d_ff=256)
-    params = models.init_cevit(key, mcfg)
-    pilot_sc = jnp.any(ofdm.pilot_mask(gcfg), axis=0)
-    feats = models.cevit_features(h_ls, pilot_sc, float(slot["noise_var"]))
-    _ = models.cevit_apply(params, mcfg, feats)
-    n_tok = gcfg.n_subcarriers // mcfg.patch
-    te_flops = mcfg.layers * (
-        8 * n_tok * mcfg.d_model**2 + 4 * n_tok**2 * mcfg.d_model
-        + 4 * n_tok * mcfg.d_model * mcfg.d_ff
-    )
-    te_ms = te_flops / 2 / (pool.N_TES * pool.TE_MACS_PER_CYCLE * 0.67) / 1e6
-    print(f"CE-ViT CHE on TEs (67% util): ~{te_ms:.4f} ms of 1 ms TTI")
-
-    # 3. the three paper compute blocks through the fused kernels
-    x = jax.random.normal(key, (512, 512))
-    w = jax.random.normal(jax.random.PRNGKey(1), (512, 512))
-    b = jnp.zeros((512,))
-    fused = pool.fc_softmax_concurrent(x, w, b)
-    seq = pool.fc_softmax_sequential(x, w, b)
-    print(f"fused FC+softmax matches sequential: "
-          f"{bool(jnp.allclose(fused, seq, atol=1e-4))}")
-    cyc = pool.fc_block_cycles(512, 512, 512)
-    print(f"  TensorPool cycles: sequential={cyc.sequential:.0f} "
-          f"concurrent={cyc.concurrent():.0f} "
-          f"(-{(1-cyc.concurrent()/cyc.sequential)*100:.0f}%)")
+    print("\n=== batched multi-user serving (PhyServeEngine) ===")
+    rx = build_pipeline("classical", scn)
+    engine = PhyServeEngine(rx, batch_size=4)
+    engine.submit_traffic(jax.random.PRNGKey(1), n_users=16)
+    print(engine.run().summary())
 
 
 if __name__ == "__main__":

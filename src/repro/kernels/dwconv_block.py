@@ -14,11 +14,14 @@ the (H*W, F) accumulator is output-stationary in VMEM.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import compiler_params, resolve_interpret
 
 
 def _dwconv_kernel(x_ref, dw_ref, pw_ref, g_ref, b_ref, o_ref, acc_ref, *,
@@ -63,8 +66,9 @@ def dwconv_block(
     *,
     bc: int = 128,
     eps: float = 1e-5,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     b, hp, wp, c = x.shape
     h, w = hp - 2, wp - 2
     f = pw.shape[1]
@@ -87,7 +91,7 @@ def dwconv_block(
         out_specs=pl.BlockSpec((1, h, w, f), lambda bi, ci: (bi, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, w, f), x.dtype),
         scratch_shapes=[pltpu.VMEM((h * w, f), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import compiler_params, resolve_interpret
+
 
 def _fc_softmax_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(1) == 0)
@@ -45,8 +47,9 @@ def fc_softmax(
     *,
     bm: int = 128,
     bk: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     m, k = x.shape
     _, n = w.shape
     bm, bk = min(bm, m), min(bk, k)
@@ -66,7 +69,7 @@ def fc_softmax(
         out_specs=pl.BlockSpec((bm, n), lambda i, kk: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

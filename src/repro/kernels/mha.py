@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import compiler_params, resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -66,8 +68,9 @@ def mha(
     causal: bool = True,
     bq: int = 128,
     bkv: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     bh, sq, d = q.shape
     _, sk, _ = k.shape
     bq = min(bq, sq)
@@ -94,7 +97,7 @@ def mha(
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

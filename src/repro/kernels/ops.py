@@ -14,17 +14,14 @@ from repro.kernels import dwconv_block as _dw
 from repro.kernels import fc_softmax as _fc
 from repro.kernels import mha as _mha
 from repro.kernels import te_gemm as _te
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.runtime import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("epilogue", "block_shape"))
 def te_gemm(x, w, bias=None, epilogue: str = "none", block_shape=None):
     return _te.te_gemm(
         x, w, bias, epilogue=epilogue, block_shape=block_shape,
-        interpret=_default_interpret(),
+        interpret=resolve_interpret(None),
     )
 
 
@@ -32,14 +29,14 @@ def te_gemm(x, w, bias=None, epilogue: str = "none", block_shape=None):
 def mha(q, k, v, causal: bool = True, bq: int = 128, bkv: int = 128):
     return _mha.mha(
         q, k, v, causal=causal, bq=bq, bkv=bkv,
-        interpret=_default_interpret(),
+        interpret=resolve_interpret(None),
     )
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk"))
 def fc_softmax(x, w, bias=None, bm: int = 128, bk: int = 128):
     return _fc.fc_softmax(
-        x, w, bias, bm=bm, bk=bk, interpret=_default_interpret()
+        x, w, bias, bm=bm, bk=bk, interpret=resolve_interpret(None)
     )
 
 
@@ -47,7 +44,7 @@ def fc_softmax(x, w, bias=None, bm: int = 128, bk: int = 128):
 def dwconv_block(x_padded, dw, pw, gamma, beta, bc: int = 128):
     return _dw.dwconv_block(
         x_padded, dw, pw, gamma, beta, bc=bc,
-        interpret=_default_interpret(),
+        interpret=resolve_interpret(None),
     )
 
 

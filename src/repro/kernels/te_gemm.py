@@ -29,6 +29,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.balance import gemm_tile_balance, tile_vmem_bytes
 from repro.core.machine import TPU_V5E, Machine
+from repro.kernels.runtime import compiler_params, resolve_interpret
 
 
 def pick_block_shape(
@@ -96,8 +97,9 @@ def te_gemm(
     epilogue: str = "none",  # none | relu | silu | softmax(row within block)
     block_shape: Optional[tuple[int, int, int]] = None,
     out_dtype=None,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     m, k = x.shape
     k2, n = w.shape
     assert k == k2
@@ -130,7 +132,7 @@ def te_gemm(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

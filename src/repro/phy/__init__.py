@@ -1,1 +1,10 @@
-from repro.phy import classical, models, ofdm
+from repro.phy import classical, link, models, ofdm, scenarios
+from repro.phy.link import (
+    PIPELINE_BUILDERS, ReceiverPipeline, RxStage, build_pipeline,
+    slot_metrics,
+)
+from repro.phy.ofdm import Modem, make_modem
+from repro.phy.scenarios import (
+    LinkScenario, all_scenarios, get_scenario, register_scenario,
+    scenario_names,
+)

@@ -95,3 +95,83 @@ def mimo_mmse_detect(
     a = gram + noise_var * jnp.eye(n_tx, dtype=h.dtype)
     rhs = jnp.einsum("bstr,bsr->bst", hh, y)
     return jnp.linalg.solve(a, rhs[..., None])[..., 0]  # (B, n_sc, n_tx)
+
+
+def mimo_mmse_detect_ext(
+    y: jax.Array,  # (B, n_sc, n_rx)
+    h: jax.Array,  # (B, n_sc, n_rx, n_tx)
+    noise_var: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Unbiased MMSE detection with per-stream post-equalization noise.
+
+    The raw MMSE output is biased by mu_t = [ (H^H H + s2 I)^-1 H^H H ]_tt;
+    dividing by mu_t restores unit gain, and the residual noise variance of
+    the unbiased estimate is (1 - mu_t) / mu_t (unit-power symbols) — the
+    quantity a multi-level demapper needs for correctly scaled LLRs.
+
+    Returns (x_hat_unbiased (B, n_sc, n_tx), nv_eff (B, n_sc, n_tx)).
+    """
+    n_tx = h.shape[-1]
+    hh = jnp.conj(jnp.swapaxes(h, -1, -2))  # (B, n_sc, n_tx, n_rx)
+    gram = jnp.einsum("bstr,bsru->bstu", hh, h)
+    a = gram + noise_var * jnp.eye(n_tx, dtype=h.dtype)
+    rhs = jnp.einsum("bstr,bsr->bst", hh, y)
+    # one factorization for both the filter output and the bias diagonal
+    sol = jnp.linalg.solve(a, jnp.concatenate([rhs[..., None], gram], -1))
+    x_mmse = sol[..., 0]
+    mu = jnp.clip(
+        jnp.real(jnp.diagonal(sol[..., 1:], axis1=-2, axis2=-1)),
+        1e-6, 1.0 - 1e-6,
+    )  # (B, n_sc, n_tx)
+    return x_mmse / mu, (1.0 - mu) / mu
+
+
+def ls_channel_estimate_link(
+    y: jax.Array,  # (B, n_sym, n_sc, n_rx) received grid
+    pilot_seq: jax.Array,  # (n_sc,) known pilot symbols
+    pilot_masks: jax.Array,  # (n_tx, n_sym, n_sc) staggered per-tx combs
+    pilot_stride: int,
+) -> jax.Array:
+    """Per-(rx, tx) LS estimate from staggered DMRS combs + interpolation.
+
+    Each tx is sounded on its own comb (others silent there), so the LS
+    estimate at tx t's pilot REs is interference-free.  Returns
+    H_hat (B, n_sc, n_rx, n_tx), flat in time within the slot.
+    """
+    n_tx = pilot_masks.shape[0]
+    b, n_sym, n_sc, n_rx = y.shape
+    spacing = pilot_stride * n_tx
+    est = y / pilot_seq[None, None, :, None]  # (B, n_sym, n_sc, n_rx)
+    pos = jnp.arange(n_sc, dtype=jnp.float32)
+
+    def interp_batch(xp, fp):  # fp (B*n_rx, n_p) complex
+        re = jax.vmap(lambda f: jnp.interp(pos, xp, f))(jnp.real(fp))
+        im = jax.vmap(lambda f: jnp.interp(pos, xp, f))(jnp.imag(fp))
+        return re + 1j * im
+
+    outs = []
+    for t in range(n_tx):
+        w = pilot_masks[t].astype(jnp.float32)[None, :, :, None]
+        h_p = jnp.sum(est * w, axis=1) / jnp.maximum(
+            jnp.sum(w, axis=1), 1e-9
+        )  # (B, n_sc, n_rx), nonzero only on tx t's comb
+        p_idx = jnp.arange(t * pilot_stride, n_sc, spacing)
+        fp = jnp.moveaxis(h_p[:, p_idx, :], 1, -1)  # (B, n_rx, n_p)
+        full = interp_batch(
+            pos[p_idx], fp.reshape(b * n_rx, -1)
+        ).reshape(b, n_rx, n_sc)
+        outs.append(jnp.moveaxis(full, 1, -1))  # (B, n_sc, n_rx)
+    return jnp.stack(outs, axis=-1)  # (B, n_sc, n_rx, n_tx)
+
+
+def mmse_smooth_link(
+    h_ls: jax.Array,  # (B, n_sc, n_rx, n_tx)
+    noise_var: jax.Array,
+    corr_len: float = 16.0,
+) -> jax.Array:
+    """Wiener smoothing of a per-(rx, tx) LS estimate (folds antenna pairs
+    into the batch of :func:`mmse_channel_estimate`)."""
+    b, n_sc, n_rx, n_tx = h_ls.shape
+    flat = jnp.moveaxis(h_ls, 1, -1).reshape(b * n_rx * n_tx, n_sc)
+    sm = mmse_channel_estimate(flat, noise_var, corr_len=corr_len)
+    return jnp.moveaxis(sm.reshape(b, n_rx, n_tx, n_sc), -1, 1)

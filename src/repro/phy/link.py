@@ -1,0 +1,449 @@
+"""Unified receiver-pipeline subsystem (paper §II/§V: AI-native PHY).
+
+A :class:`ReceiverPipeline` is a sequence of :class:`RxStage`\\ s.  Each
+stage declares
+
+  * which TensorPool engine does the work (``compute``: "TE" tensor
+    engines, "PE" the RV32 cores, "DMA" the L2<->L1 movers),
+  * a pure ``apply`` function threading a state dict (the slot) through
+    the stage, and
+  * a ``cycles`` estimator returning a :class:`repro.core.pool.BlockCycles`
+    for one slot, so the pipeline can report its TTI budget per stage.
+
+The classical chain (CFFT -> LS/MMSE CHE -> MIMO-MMSE detect -> max-log
+LLR demod) and both neural receivers (DeepRx, CE-ViT + detect) are
+registered behind this one interface; the neural hot paths run through the
+fused Pallas kernels in :mod:`repro.kernels.ops`.
+
+Pipelines operate on the unified link-slot schema of
+:func:`repro.phy.ofdm.make_link_slot` (SISO through MIMO, static or
+Doppler), and the whole chain is one jitted end-to-end function over a
+batch of slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pool
+from repro.phy import classical, models, ofdm
+from repro.phy.scenarios import LinkScenario
+
+_C16 = 4  # bytes per complex64 element when streamed as 2 x fp16
+
+
+@dataclasses.dataclass(frozen=True)
+class RxStage:
+    """One receiver stage: compute-class + apply + cycle estimator."""
+    name: str
+    compute: str  # dominant engine: "TE" | "PE" | "DMA"
+    apply: Callable[[dict], dict]
+    cycles: Callable[[], pool.BlockCycles]
+
+
+def _sum_cycles(cs) -> pool.BlockCycles:
+    cs = list(cs)
+    return pool.BlockCycles(
+        te_cycles=sum(c.te_cycles for c in cs),
+        pe_cycles=sum(c.pe_cycles for c in cs),
+        dma_cycles=sum(c.dma_cycles for c in cs),
+    )
+
+
+class ReceiverPipeline:
+    """A named chain of RxStages over the unified link-slot schema.
+
+    ``run`` executes the whole chain as one jitted function; the cycle
+    methods report the TensorPool budget without running anything.
+    """
+
+    def __init__(self, name: str, stages: list[RxStage],
+                 scenario: LinkScenario, params=None):
+        self.name = name
+        self.stages = tuple(stages)
+        self.scenario = scenario
+        self.params = params  # neural weights, None for classical chains
+        self._jitted = jax.jit(self._apply)
+
+    def _apply(self, slot: dict) -> dict:
+        state = dict(slot)
+        for st in self.stages:
+            state = st.apply(state)
+        return state
+
+    def run(self, slot: dict) -> dict:
+        """Jitted end-to-end receive over a batch of slots."""
+        return self._jitted(slot)
+
+    # -- TensorPool budget ------------------------------------------------
+    def stage_cycles(self) -> dict[str, pool.BlockCycles]:
+        return {st.name: st.cycles() for st in self.stages}
+
+    def total_cycles(self) -> pool.BlockCycles:
+        return _sum_cycles(st.cycles() for st in self.stages)
+
+    def tti_report(self, batch: int = 1, clock_hz: float = 1e9,
+                   tti_s: float = 1e-3) -> dict:
+        """Per-engine ms and the 1 ms TTI utilization for ``batch`` slots."""
+        tot = self.total_cycles()
+        to_ms = lambda cyc: batch * cyc / clock_hz * 1e3
+        conc_ms = to_ms(tot.concurrent())
+        return {
+            "te_ms": to_ms(tot.te_cycles),
+            "pe_ms": to_ms(tot.pe_cycles),
+            "dma_ms": to_ms(tot.dma_cycles),
+            "sequential_ms": to_ms(tot.sequential),
+            "concurrent_ms": conc_ms,
+            "tti_utilization": conc_ms / (tti_s * 1e3),
+            "fits_tti": bool(conc_ms <= tti_s * 1e3),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def slot_metrics(state: dict, scenario: LinkScenario,
+                 per_slot: bool = False) -> dict:
+    """BER / channel-MSE / EVM from a finished pipeline state.
+
+    ``per_slot=True`` returns (B,) arrays instead of batch means.
+    """
+    red_axes = lambda x: tuple(range(1, x.ndim)) if per_slot else None
+    data_mask = state.get("data_mask")  # (n_sym, n_sc)
+    if data_mask is None:
+        data_mask = ~jnp.any(ofdm.link_pilot_masks(scenario.grid), axis=0)
+    out = {}
+    if "llr" in state and "bits" in state:
+        hard = (state["llr"] > 0).astype(jnp.int32)
+        err = (hard != state["bits"]).astype(jnp.float32)
+        m = data_mask[None, :, :, None, None].astype(jnp.float32)
+        w = err * m
+        denom = jnp.sum(
+            jnp.broadcast_to(m, err.shape), axis=red_axes(err)
+        )
+        out["ber"] = jnp.sum(w, axis=red_axes(err)) / denom
+    h_est = state.get("h_hat", state.get("h_ls"))
+    if h_est is not None and "h" in state:
+        h_bar = jnp.mean(state["h"], axis=1)  # (B, n_sc, n_rx, n_tx)
+        e = jnp.abs(h_est - h_bar) ** 2
+        out["che_mse"] = jnp.mean(e, axis=red_axes(e))
+    if "x_hat" in state and "x" in state:
+        e = jnp.abs(state["x_hat"] - state["x"]) ** 2
+        m = data_mask[None, :, :, None].astype(jnp.float32)
+        denom = jnp.sum(jnp.broadcast_to(m, e.shape), axis=red_axes(e))
+        out["evm"] = jnp.sum(e * m, axis=red_axes(e)) / denom
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stage factories (cycle models use the paper's pool constants; all
+# estimates are per slot, batch scaling happens in tti_report)
+# ---------------------------------------------------------------------------
+
+def _grid_bytes(cfg: ofdm.GridConfig, per_re: int = 1) -> float:
+    return cfg.n_symbols * cfg.n_subcarriers * per_re * _C16
+
+
+def cfft_stage(cfg: ofdm.GridConfig) -> RxStage:
+    def apply(state):
+        state["y"] = classical.cfft(state["y_time"], axis=2)
+        return state
+
+    def cycles():
+        flops = (cfg.n_symbols * cfg.n_rx
+                 * 5.0 * cfg.fft_size * math.log2(cfg.fft_size))
+        return pool.BlockCycles(
+            te_cycles=0.0,
+            pe_cycles=pool.pe_cycles(flops, ipc=0.7),
+            dma_cycles=pool.dma_cycles(2 * _grid_bytes(cfg, cfg.n_rx)),
+        )
+
+    return RxStage("cfft", "PE", apply, cycles)
+
+
+def ls_che_stage(cfg: ofdm.GridConfig) -> RxStage:
+    seq = ofdm.pilot_sequence(cfg)
+    masks = ofdm.link_pilot_masks(cfg)
+
+    def apply(state):
+        state["h_ls"] = classical.ls_channel_estimate_link(
+            state["y"], seq, masks, cfg.pilot_stride
+        )
+        return state
+
+    def cycles():
+        n_p_sym = len(cfg.pilot_symbols)
+        flops = (n_p_sym * cfg.n_subcarriers * cfg.n_rx * 10.0  # LS + avg
+                 + cfg.n_subcarriers * cfg.n_rx * cfg.n_tx * 8.0)  # interp
+        return pool.BlockCycles(
+            te_cycles=0.0,
+            pe_cycles=pool.pe_cycles(flops, ipc=0.6),
+            dma_cycles=pool.dma_cycles(
+                _grid_bytes(cfg, cfg.n_rx)
+                + cfg.n_subcarriers * cfg.n_rx * cfg.n_tx * _C16
+            ),
+        )
+
+    return RxStage("ls_che", "PE", apply, cycles)
+
+
+def mmse_che_stage(cfg: ofdm.GridConfig, corr_len: float = 16.0) -> RxStage:
+    """Wiener smoothing; the (n_sc x n_sc) filter is per-scenario and
+    amortized, the per-slot work is the matrix-vector apply per antenna
+    pair."""
+
+    def apply(state):
+        state["h_hat"] = classical.mmse_smooth_link(
+            state["h_ls"], state["noise_var"], corr_len=corr_len
+        )
+        return state
+
+    def cycles():
+        n_sc = cfg.n_subcarriers
+        flops = 8.0 * n_sc * n_sc * cfg.n_rx * cfg.n_tx
+        return pool.BlockCycles(
+            te_cycles=0.0,
+            pe_cycles=pool.pe_cycles(flops, ipc=0.77),
+            dma_cycles=pool.dma_cycles(
+                2 * n_sc * cfg.n_rx * cfg.n_tx * _C16
+            ),
+        )
+
+    return RxStage("mmse_che", "PE", apply, cycles)
+
+
+def _broadcast_h(h_est, n_sym):
+    b, n_sc, n_rx, n_tx = h_est.shape
+    hb = jnp.broadcast_to(
+        h_est[:, None], (b, n_sym, n_sc, n_rx, n_tx)
+    )
+    return hb.reshape(b * n_sym, n_sc, n_rx, n_tx)
+
+
+def detect_stage(cfg: ofdm.GridConfig) -> RxStage:
+    def apply(state):
+        h_est = state.get("h_hat", state.get("h_ls"))
+        b, n_sym, n_sc, n_rx = state["y"].shape
+        yf = state["y"].reshape(b * n_sym, n_sc, n_rx)
+        x_hat, nv_eff = classical.mimo_mmse_detect_ext(
+            yf, _broadcast_h(h_est, n_sym), state["noise_var"]
+        )
+        state["x_hat"] = x_hat.reshape(b, n_sym, n_sc, cfg.n_tx)
+        state["nv_eff"] = nv_eff.reshape(b, n_sym, n_sc, cfg.n_tx)
+        return state
+
+    def cycles():
+        t, r = cfg.n_tx, cfg.n_rx
+        per_re = 8.0 * (t * t * r + t ** 3 + t * r)  # gram+solve+rhs
+        flops = cfg.n_symbols * cfg.n_subcarriers * per_re
+        return pool.BlockCycles(
+            te_cycles=0.0,
+            pe_cycles=pool.pe_cycles(flops, ipc=0.59),
+            dma_cycles=pool.dma_cycles(
+                _grid_bytes(cfg, cfg.n_rx) + _grid_bytes(cfg, cfg.n_tx)
+            ),
+        )
+
+    return RxStage("mmse_detect", "PE", apply, cycles)
+
+
+def demod_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem) -> RxStage:
+    def apply(state):
+        state["llr"] = modem.demod_llr(state["x_hat"], state["nv_eff"])
+        return state
+
+    def cycles():
+        lvl = 2 ** (modem.bits_per_symbol // 2)
+        flops = (cfg.n_symbols * cfg.n_subcarriers * cfg.n_tx
+                 * lvl * 8.0)
+        return pool.BlockCycles(
+            te_cycles=0.0,
+            pe_cycles=pool.pe_cycles(flops, ipc=0.6),
+            dma_cycles=pool.dma_cycles(
+                _grid_bytes(cfg, cfg.n_tx * modem.bits_per_symbol // 2)
+            ),
+        )
+
+    return RxStage("llr_demod", "PE", apply, cycles)
+
+
+# -- neural stages ----------------------------------------------------------
+
+def deeprx_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem, params,
+                 dcfg: models.DeepRxConfig, fused: bool = True) -> RxStage:
+    union = jnp.any(ofdm.link_pilot_masks(cfg), axis=0)
+    nb = modem.bits_per_symbol
+
+    def apply(state):
+        y = state["y"]  # (B, n_sym, n_sc, n_rx)
+        b, n_sym, n_sc, n_rx = y.shape
+        h_ls = state["h_ls"].reshape(b, 1, n_sc, -1)
+        h_ls = jnp.broadcast_to(
+            h_ls, (b, n_sym, n_sc, h_ls.shape[-1])
+        )
+        pm = jnp.broadcast_to(
+            union[None, :, :, None].astype(jnp.float32),
+            (b, n_sym, n_sc, 1),
+        )
+        nv = jnp.full((b, n_sym, n_sc, 1), state["noise_var"], jnp.float32)
+        feats = jnp.concatenate(
+            [jnp.real(y), jnp.imag(y), jnp.real(h_ls), jnp.imag(h_ls),
+             pm, nv], axis=-1,
+        ).astype(jnp.float32)
+        llr = models.deeprx_apply(params, dcfg, feats, fused=fused)
+        state["llr"] = llr.reshape(b, n_sym, n_sc, cfg.n_tx, nb)
+        return state
+
+    def cycles():
+        grid = cfg.n_symbols * cfg.n_subcarriers
+        c = dcfg.channels
+        macs = grid * (9.0 * dcfg.in_features * c
+                       + dcfg.blocks * 2 * 9.0 * c * c
+                       + c * dcfg.bits_per_re)
+        relu_elems = grid * c * (1 + 2 * dcfg.blocks)
+        from repro.common.params import tree_size_bytes
+        pbytes = tree_size_bytes(
+            jax.tree.map(lambda x: x.astype(jnp.float16), params)
+        )
+        return pool.BlockCycles(
+            te_cycles=pool.te_cycles(macs, utilization=0.67),
+            pe_cycles=pool.pe_elem_cycles(relu_elems, "relu"),
+            dma_cycles=pool.dma_cycles(
+                pbytes + _grid_bytes(cfg, dcfg.in_features)
+                + _grid_bytes(cfg, dcfg.bits_per_re)
+            ),
+        )
+
+    return RxStage("deeprx", "TE", apply, cycles)
+
+
+def cevit_che_stage(cfg: ofdm.GridConfig, params,
+                    mcfg: models.CEViTConfig, fused: bool = True) -> RxStage:
+    comb_tx = jnp.any(ofdm.link_pilot_masks(cfg), axis=1)  # (n_tx, n_sc)
+
+    def apply(state):
+        h_ls = state["h_ls"]  # (B, n_sc, n_rx, n_tx)
+        b, n_sc, n_rx, n_tx = h_ls.shape
+        pairs = jnp.moveaxis(h_ls, 1, -1).reshape(b * n_rx * n_tx, n_sc)
+        flags = jnp.tile(comb_tx.astype(jnp.float32), (n_rx, 1))
+        flags = jnp.tile(flags, (b, 1))  # (B*n_rx*n_tx, n_sc)
+        nv = jnp.full(pairs.shape, state["noise_var"], jnp.float32)
+        feats = jnp.stack(
+            [jnp.real(pairs), jnp.imag(pairs), flags, nv], axis=-1
+        ).astype(jnp.float32)
+        h_hat = models.cevit_apply(params, mcfg, feats, fused=fused)
+        h_hat = h_hat.reshape(b, n_rx, n_tx, n_sc)
+        state["h_hat"] = jnp.moveaxis(h_hat, -1, 1)
+        return state
+
+    def cycles():
+        n_tok = cfg.n_subcarriers // mcfg.patch
+        pairs = cfg.n_rx * cfg.n_tx
+        per_layer = pool.mha_block_cycles(
+            mcfg.heads, n_tok, mcfg.d_model
+        )
+        mlp_macs = 2.0 * n_tok * mcfg.d_model * mcfg.d_ff
+        pin = mcfg.patch * mcfg.in_features
+        embed_macs = n_tok * pin * mcfg.d_model
+        head_macs = n_tok * mcfg.d_model * mcfg.patch * 2
+        ln_elems = mcfg.layers * 2 * n_tok * mcfg.d_model
+        gelu_elems = mcfg.layers * n_tok * mcfg.d_ff
+        one_pair = _sum_cycles(
+            [per_layer] * mcfg.layers
+            + [pool.BlockCycles(
+                te_cycles=pool.te_cycles(
+                    mcfg.layers * mlp_macs + embed_macs + head_macs,
+                    utilization=0.67,
+                ),
+                pe_cycles=(pool.pe_elem_cycles(ln_elems, "layernorm")
+                           + pool.pe_elem_cycles(gelu_elems, "relu")),
+                dma_cycles=pool.dma_cycles(
+                    2 * cfg.n_subcarriers * _C16
+                ),
+            )]
+        )
+        return pool.BlockCycles(
+            te_cycles=pairs * one_pair.te_cycles,
+            pe_cycles=pairs * one_pair.pe_cycles,
+            dma_cycles=pairs * one_pair.dma_cycles,
+        )
+
+    return RxStage("cevit_che", "TE", apply, cycles)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline builders — the three receivers behind one API
+# ---------------------------------------------------------------------------
+
+def build_classical(scenario: LinkScenario, *, mmse_smooth: bool = True,
+                    **_) -> ReceiverPipeline:
+    """CFFT -> LS CHE [-> Wiener CHE] -> MIMO-MMSE detect -> LLR demod."""
+    cfg, modem = scenario.grid, scenario.modem
+    stages = [cfft_stage(cfg), ls_che_stage(cfg)]
+    if mmse_smooth:
+        stages.append(mmse_che_stage(cfg))
+    stages += [detect_stage(cfg), demod_stage(cfg, modem)]
+    return ReceiverPipeline(f"classical/{scenario.name}", stages, scenario)
+
+
+def build_deeprx(scenario: LinkScenario, *, params=None, channels: int = 32,
+                 blocks: int = 2, fused: bool = True,
+                 seed: int = 0, **_) -> ReceiverPipeline:
+    """CFFT -> LS CHE -> DeepRx conv receiver (grid features -> LLRs)."""
+    cfg, modem = scenario.grid, scenario.modem
+    dcfg = models.DeepRxConfig(
+        channels=channels, blocks=blocks,
+        bits_per_re=cfg.n_tx * modem.bits_per_symbol,
+        in_features=2 * cfg.n_rx + 2 * cfg.n_rx * cfg.n_tx + 2,
+    )
+    if params is None:
+        params = models.init_deeprx(jax.random.PRNGKey(seed), dcfg)
+    stages = [
+        cfft_stage(cfg), ls_che_stage(cfg),
+        deeprx_stage(cfg, modem, params, dcfg, fused=fused),
+    ]
+    return ReceiverPipeline(
+        f"deeprx/{scenario.name}", stages, scenario, params=params
+    )
+
+
+def build_cevit(scenario: LinkScenario, *, params=None, d_model: int = 64,
+                heads: int = 4, layers: int = 2, d_ff: int = 128,
+                patch: int = 4, fused: bool = True,
+                seed: int = 0, **_) -> ReceiverPipeline:
+    """CFFT -> LS CHE -> CE-ViT CHE -> MIMO-MMSE detect -> LLR demod."""
+    cfg, modem = scenario.grid, scenario.modem
+    mcfg = models.CEViTConfig(
+        d_model=d_model, heads=heads, layers=layers, d_ff=d_ff, patch=patch
+    )
+    if params is None:
+        params = models.init_cevit(jax.random.PRNGKey(seed), mcfg)
+    stages = [
+        cfft_stage(cfg), ls_che_stage(cfg),
+        cevit_che_stage(cfg, params, mcfg, fused=fused),
+        detect_stage(cfg), demod_stage(cfg, modem),
+    ]
+    return ReceiverPipeline(
+        f"cevit/{scenario.name}", stages, scenario, params=params
+    )
+
+
+PIPELINE_BUILDERS: dict[str, Callable[..., ReceiverPipeline]] = {
+    "classical": build_classical,
+    "deeprx": build_deeprx,
+    "cevit": build_cevit,
+}
+
+
+def build_pipeline(kind: str, scenario: LinkScenario,
+                   **kw) -> ReceiverPipeline:
+    if kind not in PIPELINE_BUILDERS:
+        raise KeyError(
+            f"unknown receiver {kind!r}; have {sorted(PIPELINE_BUILDERS)}"
+        )
+    return PIPELINE_BUILDERS[kind](scenario, **kw)

@@ -17,8 +17,32 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.params import Param, init_params
+from repro.kernels import ops as kops
 
 Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel routing (TensorPool TEs = the Pallas GEMM/MHA kernels)
+#
+# The receiver pipelines run their hot GEMM/conv/MHA paths through
+# repro.kernels.ops instead of plain jnp.  The Pallas kernels need
+# block-divisible shapes, and they have no autodiff rules, so the fused
+# path is opt-in (``fused=True``) and falls back to jnp when shapes don't
+# tile — training keeps using the jnp path.
+# ---------------------------------------------------------------------------
+
+def _tiles_ok(*dims: int) -> bool:
+    """True when every dim divides into the 128-lane kernel blocks."""
+    return all(d < 128 or d % 128 == 0 for d in dims)
+
+
+def _te_linear(x2d: jax.Array, w: jax.Array, b=None) -> jax.Array:
+    """(M, K) @ (K, N) through the TE GEMM kernel with explicit blocks."""
+    m, k = x2d.shape
+    n = w.shape[1]
+    bs = (min(128, m), min(128, n), min(128, k))
+    return kops.te_gemm(x2d, w, b, epilogue="none", block_shape=bs)
 
 
 # ---------------------------------------------------------------------------
@@ -60,14 +84,56 @@ def _conv2d(p, x):
     ) + p["b"]
 
 
-def deeprx_apply(params, cfg: DeepRxConfig, feats: jax.Array) -> jax.Array:
-    """feats: (B, n_sym, n_sc, in_features) -> LLRs (B, n_sym, n_sc, bits)."""
-    x = jax.nn.relu(_conv2d(params["conv_in"], feats))
+def _conv2d_te(p, x):
+    """SAME conv as im2col + the TE GEMM Pallas kernel.
+
+    Patches (B*H*W, kh*kw*cin) stream through the tensor engines; the
+    contraction dim is zero-padded up to a 128 multiple when needed.
+    """
+    w = p["w"]
+    kh, kw, cin, cout = w.shape
+    b, hh, ww, _ = x.shape
+    if kh == 1 and kw == 1:
+        patches = x.reshape(b * hh * ww, cin)
+        wm = w.reshape(cin, cout)
+    else:
+        xp = jnp.pad(x, ((0, 0), (kh // 2,) * 2, (kw // 2,) * 2, (0, 0)))
+        cols = [
+            xp[:, i : i + hh, j : j + ww, :]
+            for i in range(kh) for j in range(kw)
+        ]
+        patches = jnp.concatenate(cols, axis=-1).reshape(
+            b * hh * ww, kh * kw * cin
+        )
+        wm = w.reshape(kh * kw * cin, cout)
+    k = patches.shape[1]
+    if k > 128 and k % 128 != 0:
+        kp = (k // 128 + 1) * 128
+        patches = jnp.pad(patches, ((0, 0), (0, kp - k)))
+        wm = jnp.pad(wm, ((0, kp - k), (0, 0)))
+    out = _te_linear(patches, wm, p["b"])
+    return out.reshape(b, hh, ww, cout)
+
+
+def _deeprx_tiles_ok(cfg: DeepRxConfig, feats: jax.Array) -> bool:
+    b, hh, ww, _ = feats.shape
+    return _tiles_ok(b * hh * ww, cfg.channels, cfg.bits_per_re)
+
+
+def deeprx_apply(params, cfg: DeepRxConfig, feats: jax.Array,
+                 *, fused: bool = False) -> jax.Array:
+    """feats: (B, n_sym, n_sc, in_features) -> LLRs (B, n_sym, n_sc, bits).
+
+    ``fused=True`` routes every conv through the TE GEMM Pallas kernel
+    (im2col); falls back to jnp when the shapes don't tile.
+    """
+    conv = _conv2d_te if fused and _deeprx_tiles_ok(cfg, feats) else _conv2d
+    x = jax.nn.relu(conv(params["conv_in"], feats))
     for bp in params["blocks"]:
-        h = jax.nn.relu(_conv2d(bp["conv1"], x))
-        h = _conv2d(bp["conv2"], h)
+        h = jax.nn.relu(conv(bp["conv1"], x))
+        h = conv(bp["conv2"], h)
         x = jax.nn.relu(x + h)
-    return _conv2d(params["conv_out"], x)
+    return conv(params["conv_out"], x)
 
 
 def deeprx_features(slot: dict, h_ls: jax.Array) -> jax.Array:
@@ -132,30 +198,65 @@ def _ln(p, x, eps=1e-5):
     return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
 
 
-def cevit_apply(params, cfg: CEViTConfig, feats: jax.Array) -> jax.Array:
-    """feats: (B, n_sc, in_features) -> H_hat (B, n_sc) complex."""
+def _cevit_tiles_ok(cfg: CEViTConfig, b: int, n_tok: int, fin: int) -> bool:
+    return _tiles_ok(
+        b * n_tok, n_tok, cfg.patch * fin, cfg.d_model, cfg.d_ff,
+        cfg.patch * 2,
+    )
+
+
+def cevit_apply(params, cfg: CEViTConfig, feats: jax.Array,
+                *, fused: bool = False) -> jax.Array:
+    """feats: (B, n_sc, in_features) -> H_hat (B, n_sc) complex.
+
+    ``fused=True`` routes the qkv/out/MLP GEMMs through the TE GEMM kernel
+    and the attention through the flash-MHA Pallas kernel; falls back to
+    jnp when shapes don't tile (e.g. during training, which needs grads).
+    """
     b, n_sc, fin = feats.shape
     n_tok = n_sc // cfg.patch
-    x = feats.reshape(b, n_tok, cfg.patch * fin)
-    x = x @ params["embed"] + params["pos"][:n_tok][None]
+    fused = fused and _cevit_tiles_ok(cfg, b, n_tok, fin)
+
+    def linear(x3d, w, bias=None):
+        if fused:
+            out = _te_linear(x3d.reshape(b * n_tok, -1), w, bias)
+            return out.reshape(b, n_tok, -1)
+        out = x3d @ w
+        return out if bias is None else out + bias
+
+    x = linear(feats.reshape(b, n_tok, cfg.patch * fin), params["embed"])
+    x = x + params["pos"][:n_tok][None]
     h_heads = cfg.heads
     dh = cfg.d_model // h_heads
     for bp in params["blocks"]:
         hN = _ln(bp["ln1"], x)
-        qkv = hN @ bp["wqkv"]
-        q, k, v = jnp.split(qkv, 3, axis=-1)
+        if fused:  # three d x d GEMMs so each output dim tiles
+            q, k, v = (
+                linear(hN, wi) for wi in jnp.split(bp["wqkv"], 3, axis=-1)
+            )
+        else:
+            q, k, v = jnp.split(linear(hN, bp["wqkv"]), 3, axis=-1)
         q = q.reshape(b, n_tok, h_heads, dh)
         k = k.reshape(b, n_tok, h_heads, dh)
         v = v.reshape(b, n_tok, h_heads, dh)
-        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * (dh**-0.5)
-        p_attn = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bhqk,bkhd->bqhd", p_attn, v).reshape(
-            b, n_tok, cfg.d_model
-        )
-        x = x + o @ bp["wo"]
+        if fused:
+            to_bh = lambda t: t.transpose(0, 2, 1, 3).reshape(
+                b * h_heads, n_tok, dh
+            )
+            o = kops.mha(to_bh(q), to_bh(k), to_bh(v), causal=False)
+            o = o.reshape(b, h_heads, n_tok, dh).transpose(0, 2, 1, 3)
+            o = o.reshape(b, n_tok, cfg.d_model)
+        else:
+            s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * (dh**-0.5)
+            p_attn = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", p_attn, v).reshape(
+                b, n_tok, cfg.d_model
+            )
+        x = x + linear(o, bp["wo"])
         hN = _ln(bp["ln2"], x)
-        x = x + (jax.nn.gelu(hN @ bp["w1"] + bp["b1"]) @ bp["w2"] + bp["b2"])
-    out = x @ params["head"]  # (B, n_tok, patch*2)
+        hN = jax.nn.gelu(linear(hN, bp["w1"], bp["b1"]))
+        x = x + linear(hN, bp["w2"], bp["b2"])
+    out = linear(x, params["head"])  # (B, n_tok, patch*2)
     out = out.reshape(b, n_sc, 2)
     return out[..., 0] + 1j * out[..., 1]
 

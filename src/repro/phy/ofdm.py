@@ -1,8 +1,9 @@
 """OFDM uplink simulation substrate (paper §II domain).
 
-Resource grid, QAM mod/demod, Rayleigh TDL channel with exponential power
-delay profile, AWGN — everything needed to generate synthetic uplink slots
-for the classical chain and the neural receivers.
+Resource grid, gray-coded square-QAM modems (QPSK/16/64-QAM), Rayleigh TDL
+channel with exponential power delay profile (optionally time-varying for
+Doppler scenarios), AWGN — everything needed to generate synthetic uplink
+slots for the classical chain and the neural receivers, SISO through MIMO.
 """
 from __future__ import annotations
 
@@ -10,6 +11,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,37 +27,95 @@ class GridConfig:
     delay_spread: float = 2.0  # exponential PDP decay (in taps)
 
 
+# ---------------------------------------------------------------------------
+# Constellation-parameterized modem (gray-coded square QAM)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Modem:
+    """Gray-coded square-QAM modem.
+
+    ``levels[j]`` is the per-axis amplitude for the axis-bit integer ``j``
+    (MSB first), so adjacent constellation points differ in one bit.  Bits
+    are laid out (..., bits_per_symbol) with the first half on the real
+    axis, the second half on the imaginary axis.
+    """
+    name: str
+    bits_per_symbol: int
+    levels: tuple  # indexed by the bit-int of one axis
+    norm: float  # mean symbol energy of the un-normalized grid
+
+    @property
+    def bits_per_axis(self) -> int:
+        return self.bits_per_symbol // 2
+
+    def mod(self, bits: jax.Array) -> jax.Array:
+        """bits (..., bits_per_symbol) -> unit-power complex symbols."""
+        nb = self.bits_per_axis
+        lv = jnp.asarray(self.levels, jnp.float32)
+        w = (2 ** jnp.arange(nb - 1, -1, -1)).astype(jnp.int32)
+        idx_re = jnp.sum(bits[..., :nb].astype(jnp.int32) * w, axis=-1)
+        idx_im = jnp.sum(bits[..., nb:].astype(jnp.int32) * w, axis=-1)
+        return (lv[idx_re] + 1j * lv[idx_im]) / jnp.sqrt(self.norm)
+
+    def demod_llr(self, y: jax.Array, noise_var: jax.Array) -> jax.Array:
+        """Max-log LLRs. y (...,) complex -> (..., bits_per_symbol).
+
+        Convention: llr = log P(b=1)/P(b=0); hard decision is ``llr > 0``.
+        ``noise_var`` broadcasts against ``y`` (scalar or per-element).
+        """
+        nb = self.bits_per_axis
+        lv = jnp.asarray(self.levels, jnp.float32)
+        s = jnp.sqrt(self.norm)
+        nv = jnp.maximum(
+            jnp.broadcast_to(noise_var, y.shape) * self.norm, 1e-6
+        )
+        bit_of = np.array(
+            [[(j >> (nb - 1 - p)) & 1 for j in range(len(self.levels))]
+             for p in range(nb)], dtype=bool,
+        )  # (nb, L): bit p of the level index
+
+        def axis_llrs(u):
+            d = (u[..., None] - lv) ** 2  # (..., L)
+            out = []
+            for p in range(nb):
+                one = jnp.asarray(bit_of[p])
+                d0 = jnp.min(jnp.where(one, jnp.inf, d), axis=-1)
+                d1 = jnp.min(jnp.where(one, d, jnp.inf), axis=-1)
+                out.append(d0 - d1)
+            return out
+
+        llrs = axis_llrs(jnp.real(y) * s) + axis_llrs(jnp.imag(y) * s)
+        return jnp.stack(llrs, axis=-1) / nv[..., None]
+
+
+_MODEMS = {
+    "qpsk": Modem("qpsk", 2, (-1.0, 1.0), 2.0),
+    "qam16": Modem("qam16", 4, (-3.0, -1.0, 3.0, 1.0), 10.0),
+    "qam64": Modem(
+        "qam64", 6, (-7.0, -5.0, -1.0, -3.0, 7.0, 5.0, 1.0, 3.0), 42.0
+    ),
+}
+_ORDER_TO_NAME = {4: "qpsk", 16: "qam16", 64: "qam64"}
+
+
+def make_modem(modulation) -> Modem:
+    """Look up a modem by name ("qpsk"/"qam16"/"qam64") or order (4/16/64)."""
+    if isinstance(modulation, Modem):
+        return modulation
+    if isinstance(modulation, int):
+        modulation = _ORDER_TO_NAME[modulation]
+    return _MODEMS[modulation]
+
+
 def qam16_mod(bits: jax.Array) -> jax.Array:
     """bits: (..., 4) -> complex symbol (gray-coded 16-QAM, unit power)."""
-    b = bits.astype(jnp.float32)
-    re = (2 * b[..., 0] - 1) * (2 - (2 * b[..., 1] - 1) * 1.0)
-    im = (2 * b[..., 2] - 1) * (2 - (2 * b[..., 3] - 1) * 1.0)
-    # gray mapping: levels in {-3,-1,1,3}/sqrt(10)
-    lv = jnp.array([-3.0, -1.0, 3.0, 1.0])
-    re = lv[(bits[..., 0] * 2 + bits[..., 1]).astype(jnp.int32)]
-    im = lv[(bits[..., 2] * 2 + bits[..., 3]).astype(jnp.int32)]
-    return (re + 1j * im) / jnp.sqrt(10.0)
+    return _MODEMS["qam16"].mod(bits)
 
 
 def qam16_demod_llr(y: jax.Array, noise_var: jax.Array) -> jax.Array:
-    """Max-log LLRs for gray 16-QAM. y: (...,) complex -> (..., 4).
-
-    Convention: llr = log P(b=1)/P(b=0); hard decision is ``llr > 0``.
-    """
-    s = jnp.sqrt(10.0)
-    yr, yi = jnp.real(y) * s, jnp.imag(y) * s
-    nv = jnp.maximum(noise_var * 10.0, 1e-6)
-
-    def llr_pair(u):
-        l0 = (jnp.minimum((u + 3) ** 2, (u + 1) ** 2)
-              - jnp.minimum((u - 3) ** 2, (u - 1) ** 2))
-        l1 = (jnp.minimum((u + 3) ** 2, (u - 3) ** 2)
-              - jnp.minimum((u + 1) ** 2, (u - 1) ** 2))
-        return l0, l1
-
-    r0, r1 = llr_pair(yr)
-    i0, i1 = llr_pair(yi)
-    return jnp.stack([r0, r1, i0, i1], axis=-1) / nv[..., None]
+    """Max-log LLRs for gray 16-QAM. y: (...,) complex -> (..., 4)."""
+    return _MODEMS["qam16"].demod_llr(y, noise_var)
 
 
 def tdl_channel(key: jax.Array, cfg: GridConfig, batch: int) -> jax.Array:
@@ -110,6 +170,124 @@ def make_slot(key: jax.Array, cfg: GridConfig, batch: int, snr_db: float):
         "y": y, "x": x, "h": h, "bits": bits,
         "pilots": pilots, "pilot_mask": pm,
         "noise_var": jnp.asarray(noise_var, jnp.float32),
+    }
+
+
+def tdl_channel_time_varying(
+    key: jax.Array, cfg: GridConfig, batch: int, n_steps: int, rho: float
+) -> jax.Array:
+    """Gauss-Markov time-varying Rayleigh TDL.
+
+    Per-symbol tap correlation ``rho`` (Jakes' J0(2 pi fd T) in the AR(1)
+    approximation); rho=1 reduces to a block-fading channel.  Returns the
+    frequency response (batch, n_steps, n_rx, n_tx, n_sc).
+    """
+    pdp = jnp.exp(-jnp.arange(cfg.n_taps) / cfg.delay_spread)
+    pdp = pdp / jnp.sum(pdp)
+    shape = (batch, cfg.n_rx, cfg.n_tx, cfg.n_taps)
+
+    def cnormal(k, shp):
+        kr, ki = jax.random.split(k)
+        return jax.random.normal(kr, shp) + 1j * jax.random.normal(ki, shp)
+
+    k0, kw = jax.random.split(key)
+    taps0 = cnormal(k0, shape) * jnp.sqrt(pdp / 2.0)
+    innov = cnormal(kw, (n_steps - 1,) + shape) * jnp.sqrt(pdp / 2.0)
+
+    def step(carry, w):
+        nxt = rho * carry + jnp.sqrt(1.0 - rho**2) * w
+        return nxt, nxt
+
+    _, rest = jax.lax.scan(step, taps0, innov)
+    taps = jnp.concatenate([taps0[None], rest], axis=0)  # (T, B, r, t, taps)
+    taps = jnp.moveaxis(taps, 0, 1)  # (B, T, r, t, taps)
+    h = jnp.fft.fft(taps, n=cfg.fft_size, axis=-1)[..., : cfg.n_subcarriers]
+    return h
+
+
+def pilot_sequence(cfg: GridConfig) -> jax.Array:
+    """(n_sc,) known unit-power QPSK DMRS sequence."""
+    return jnp.exp(
+        1j * (jnp.pi / 4 + jnp.pi / 2 * (jnp.arange(cfg.n_subcarriers) % 4))
+    )
+
+
+def link_pilot_masks(cfg: GridConfig) -> jax.Array:
+    """(n_tx, n_symbols, n_subcarriers) bool: staggered per-tx DMRS combs.
+
+    Tx ``t`` transmits pilots on subcarriers ``sc % (stride * n_tx) ==
+    t * stride`` of the pilot symbols; on another tx's comb it is silent,
+    so per-(rx, tx) LS estimates are interference-free.
+    """
+    spacing = cfg.pilot_stride * cfg.n_tx
+    sc = jnp.arange(cfg.n_subcarriers)
+    masks = jnp.zeros((cfg.n_tx, cfg.n_symbols, cfg.n_subcarriers), bool)
+    for t in range(cfg.n_tx):
+        comb = sc % spacing == t * cfg.pilot_stride
+        for sym in cfg.pilot_symbols:
+            masks = masks.at[t, sym].set(comb)
+    return masks
+
+
+def make_link_slot(
+    key: jax.Array,
+    cfg: GridConfig,
+    modem: Modem,
+    batch: int,
+    snr_db: float,
+    doppler_rho: float = 1.0,
+):
+    """Simulate one uplink slot of the unified link schema (SISO..MIMO).
+
+    Returns dict with batched arrays
+      y_time (B, n_sym, n_sc, n_rx)  time-domain input of the CFFT stage,
+      y      (B, n_sym, n_sc, n_rx)  received frequency grid,
+      x      (B, n_sym, n_sc, n_tx)  transmitted symbols (pilots embedded),
+      h      (B, T, n_sc, n_rx, n_tx) channel (T=1 static, T=n_sym Doppler),
+      bits   (B, n_sym, n_sc, n_tx, bits_per_symbol),
+    and unbatched side info: noise_var (scalar), pilot_seq (n_sc,),
+    pilot_masks (n_tx, n_sym, n_sc), data_mask (n_sym, n_sc).
+    """
+    nb = modem.bits_per_symbol
+    kb, kc, kn = jax.random.split(key, 3)
+    bits = jax.random.bernoulli(
+        kb, 0.5, (batch, cfg.n_symbols, cfg.n_subcarriers, cfg.n_tx, nb)
+    ).astype(jnp.int32)
+    x = modem.mod(bits)  # (B, n_sym, n_sc, n_tx)
+
+    pm_tx = link_pilot_masks(cfg)  # (n_tx, n_sym, n_sc)
+    union = jnp.any(pm_tx, axis=0)  # (n_sym, n_sc)
+    seq = pilot_sequence(cfg)
+    pm_grid = jnp.moveaxis(pm_tx, 0, -1)  # (n_sym, n_sc, n_tx)
+    x = jnp.where(
+        pm_grid[None], seq[None, None, :, None],
+        jnp.where(union[None, ..., None], 0.0, x),
+    )
+
+    if doppler_rho < 1.0:
+        h = tdl_channel_time_varying(
+            kc, cfg, batch, cfg.n_symbols, doppler_rho
+        )  # (B, n_sym, n_rx, n_tx, n_sc)
+    else:
+        h = tdl_channel(kc, cfg, batch)[:, None]  # (B, 1, n_rx, n_tx, n_sc)
+    h = jnp.moveaxis(h, -1, 2)  # (B, T, n_sc, n_rx, n_tx)
+
+    hb = jnp.broadcast_to(
+        h, (batch, cfg.n_symbols) + h.shape[2:]
+    ) if h.shape[1] == 1 else h
+    y = jnp.einsum("bmsrt,bmst->bmsr", hb, x)
+    snr = 10.0 ** (snr_db / 10.0)
+    noise_var = cfg.n_tx / snr
+    kn1, kn2 = jax.random.split(kn)
+    noise = jax.random.normal(kn1, y.shape) + 1j * jax.random.normal(
+        kn2, y.shape
+    )
+    y = y + noise * jnp.sqrt(noise_var / 2.0)
+    y_time = jnp.fft.ifft(y, axis=2)
+    return {
+        "y_time": y_time, "y": y, "x": x, "h": h, "bits": bits,
+        "noise_var": jnp.asarray(noise_var, jnp.float32),
+        "pilot_seq": seq, "pilot_masks": pm_tx, "data_mask": ~union,
     }
 
 

@@ -1,0 +1,116 @@
+"""Named link scenarios (paper §II: "as many deployment scenarios as the
+operator can imagine", AI-RAN workload diversity).
+
+A :class:`LinkScenario` fixes everything a receiver pipeline needs to be
+traced and budgeted: the OFDM grid (incl. MIMO dims), the modem, SNR, and
+channel dynamics.  Scenarios are registered by name so benchmarks, tests,
+and the serve engine all draw from the same catalogue.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.phy import ofdm
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkScenario:
+    name: str
+    grid: ofdm.GridConfig
+    modulation: str  # "qpsk" | "qam16" | "qam64"
+    snr_db: float
+    doppler_rho: float = 1.0  # per-symbol tap correlation; 1.0 = static
+    description: str = ""
+
+    @property
+    def modem(self) -> ofdm.Modem:
+        return ofdm.make_modem(self.modulation)
+
+    @property
+    def is_mimo(self) -> bool:
+        return self.grid.n_tx > 1 or self.grid.n_rx > 1
+
+    @property
+    def bits_per_slot(self) -> int:
+        g = self.grid
+        return (g.n_symbols * g.n_subcarriers * g.n_tx
+                * self.modem.bits_per_symbol)
+
+    def make_batch(self, key: jax.Array, batch: int) -> dict:
+        """Simulate a batch of uplink slots of this scenario."""
+        return ofdm.make_link_slot(
+            key, self.grid, self.modem, batch, self.snr_db,
+            doppler_rho=self.doppler_rho,
+        )
+
+    def replace(self, **kw) -> "LinkScenario":
+        return dataclasses.replace(self, **kw)
+
+
+_REGISTRY: dict[str, LinkScenario] = {}
+
+
+def register_scenario(s: LinkScenario, overwrite: bool = False):
+    if s.name in _REGISTRY and not overwrite:
+        raise ValueError(f"scenario {s.name!r} already registered")
+    _REGISTRY[s.name] = s
+    return s
+
+
+def get_scenario(name: str) -> LinkScenario:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown scenario {name!r}; have {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name]
+
+
+def scenario_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def all_scenarios() -> list[LinkScenario]:
+    return [_REGISTRY[n] for n in scenario_names()]
+
+
+_SISO = ofdm.GridConfig(n_subcarriers=256, fft_size=256)
+_MIMO2X2 = ofdm.GridConfig(n_subcarriers=256, fft_size=256, n_tx=2, n_rx=2)
+_MIMO4X8 = ofdm.GridConfig(n_subcarriers=256, fft_size=256, n_tx=4, n_rx=8)
+
+for _s in [
+    LinkScenario(
+        "siso-qpsk-snr5", _SISO, "qpsk", 5.0,
+        description="coverage-limited SISO voice/control traffic",
+    ),
+    LinkScenario(
+        "siso-qam16-snr12", _SISO, "qam16", 12.0,
+        description="mid-cell SISO data traffic",
+    ),
+    LinkScenario(
+        "siso-qam64-snr24", _SISO, "qam64", 24.0,
+        description="cell-center SISO peak-rate traffic",
+    ),
+    LinkScenario(
+        "siso-qam16-doppler", _SISO, "qam16", 12.0, doppler_rho=0.95,
+        description="high-mobility SISO (time-varying TDL, AR(1) taps)",
+    ),
+    LinkScenario(
+        "mimo2x2-qpsk-snr8", _MIMO2X2, "qpsk", 8.0,
+        description="2x2 spatial multiplexing, robust modulation",
+    ),
+    LinkScenario(
+        "mimo2x2-qam16-snr16", _MIMO2X2, "qam16", 16.0,
+        description="2x2 spatial multiplexing, mid-rate",
+    ),
+    LinkScenario(
+        "mimo4x8-qam16-snr12", _MIMO4X8, "qam16", 12.0,
+        description="paper-scale 4x8 massive-MIMO uplink",
+    ),
+    LinkScenario(
+        "mimo4x8-qam64-snr24", _MIMO4X8, "qam64", 24.0,
+        description="4x8 massive-MIMO uplink at peak spectral efficiency",
+    ),
+]:
+    register_scenario(_s)

@@ -3,7 +3,9 @@ paper's own Eq. 1-6 numbers on the TensorPool machine model."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import balance
 from repro.core.machine import TENSORPOOL_N7, TPU_V5E

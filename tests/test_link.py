@@ -1,0 +1,190 @@
+"""Receiver-pipeline subsystem: scenario registry, modem round-trips,
+per-scenario BER/MSE sanity, and TensorPool cycle attribution."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.phy import build_pipeline, ofdm, slot_metrics
+from repro.phy.scenarios import all_scenarios, get_scenario, scenario_names
+
+KEY = jax.random.PRNGKey(0)
+
+# scaled-down grids for CI: short channel so comb interpolation is easy
+_SISO = ofdm.GridConfig(
+    n_subcarriers=64, fft_size=64, n_taps=4, delay_spread=1.0
+)
+_MIMO = ofdm.GridConfig(
+    n_subcarriers=64, fft_size=64, n_tx=2, n_rx=4, n_taps=4,
+    delay_spread=1.0,
+)
+
+
+def _small(name, snr_db=None):
+    import dataclasses
+    scn = get_scenario(name)
+    grid = dataclasses.replace(
+        _MIMO if scn.is_mimo else _SISO,
+        n_tx=scn.grid.n_tx, n_rx=scn.grid.n_rx,
+    )
+    return scn.replace(
+        grid=grid, snr_db=scn.snr_db if snr_db is None else snr_db
+    )
+
+
+# ---------------------------------------------------------------------------
+# scenario registry
+# ---------------------------------------------------------------------------
+
+def test_registry_coverage():
+    names = scenario_names()
+    assert len(names) >= 6
+    mods = {s.modulation for s in all_scenarios()}
+    assert {"qpsk", "qam16", "qam64"} <= mods
+    assert any(not s.is_mimo for s in all_scenarios())
+    assert any(s.is_mimo for s in all_scenarios())
+    assert any(s.doppler_rho < 1.0 for s in all_scenarios())
+
+
+def test_registry_lookup_errors():
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
+
+
+# ---------------------------------------------------------------------------
+# modem: round-trip + power across all constellations
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mod", ["qpsk", "qam16", "qam64"])
+def test_modem_roundtrip_high_snr(mod):
+    m = ofdm.make_modem(mod)
+    bits = jax.random.bernoulli(
+        KEY, 0.5, (4096, m.bits_per_symbol)
+    ).astype(jnp.int32)
+    s = m.mod(bits)
+    assert float(jnp.mean(jnp.abs(s) ** 2)) == pytest.approx(1.0, rel=0.05)
+    llr = m.demod_llr(s, jnp.asarray(1e-3))
+    assert float(jnp.mean((llr > 0).astype(jnp.int32) == bits)) == 1.0
+
+
+def test_modem_order_lookup_matches_name():
+    assert ofdm.make_modem(64) is ofdm.make_modem("qam64")
+    assert ofdm.make_modem(4).bits_per_symbol == 2
+
+
+def test_qam16_wrappers_match_modem():
+    bits = jax.random.bernoulli(KEY, 0.5, (256, 4)).astype(jnp.int32)
+    m = ofdm.make_modem("qam16")
+    assert bool(jnp.all(ofdm.qam16_mod(bits) == m.mod(bits)))
+
+
+# ---------------------------------------------------------------------------
+# classical pipeline: BER/MSE sanity across scenarios
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "name,snr_db,ber_bound,mse_bound",
+    [
+        ("siso-qpsk-snr5", 12.0, 0.05, 0.10),
+        ("siso-qam16-snr12", 18.0, 0.12, 0.06),
+        ("siso-qam64-snr24", 30.0, 0.12, 0.04),
+        ("mimo2x2-qam16-snr16", 18.0, 0.10, 0.10),
+        ("siso-qam16-doppler", 18.0, 0.35, 0.25),
+    ],
+)
+def test_classical_pipeline_sanity(name, snr_db, ber_bound, mse_bound):
+    scn = _small(name, snr_db=snr_db)
+    rx = build_pipeline("classical", scn)
+    state = rx.run(scn.make_batch(KEY, 8))
+    m = slot_metrics(state, scn)
+    assert bool(jnp.all(jnp.isfinite(state["llr"])))
+    assert float(m["ber"]) < ber_bound, m
+    assert float(m["che_mse"]) < mse_bound, m
+
+
+def test_classical_snr_monotonic():
+    """More SNR, fewer bit errors — the chain is actually demodulating."""
+    bers = []
+    for snr in (0.0, 10.0, 20.0):
+        scn = _small("siso-qam16-snr12", snr_db=snr)
+        rx = build_pipeline("classical", scn)
+        m = slot_metrics(rx.run(scn.make_batch(KEY, 8)), scn)
+        bers.append(float(m["ber"]))
+    assert bers[0] > bers[1] > bers[2]
+
+
+# ---------------------------------------------------------------------------
+# neural pipelines: run through the same API, finite outputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["deeprx", "cevit"])
+@pytest.mark.parametrize("name", ["siso-qam16-snr12", "mimo2x2-qam16-snr16"])
+def test_neural_pipeline_runs(kind, name):
+    scn = _small(name, snr_db=18.0)
+    rx = build_pipeline(kind, scn)
+    state = rx.run(scn.make_batch(KEY, 2))
+    g, nb = scn.grid, scn.modem.bits_per_symbol
+    assert state["llr"].shape == (
+        2, g.n_symbols, g.n_subcarriers, g.n_tx, nb
+    )
+    assert bool(jnp.all(jnp.isfinite(state["llr"])))
+    m = slot_metrics(state, scn)
+    # untrained nets must still be a valid receiver (BER ~ chance)
+    assert float(m["ber"]) <= 0.65
+
+
+def test_all_receivers_all_scenarios_via_one_api():
+    """Acceptance: every registered receiver builds against every
+    registered scenario through build_pipeline (traced, not run)."""
+    for scn in all_scenarios():
+        for kind in ("classical", "deeprx", "cevit"):
+            rx = build_pipeline(kind, scn)
+            tot = rx.total_cycles()
+            assert tot.sequential > 0
+
+
+# ---------------------------------------------------------------------------
+# cycle attribution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["classical", "deeprx", "cevit"])
+def test_cycle_attribution_totals_match_stage_sums(kind):
+    scn = _small("mimo2x2-qam16-snr16")
+    rx = build_pipeline(kind, scn)
+    per_stage = rx.stage_cycles()
+    tot = rx.total_cycles()
+    assert tot.te_cycles == pytest.approx(
+        sum(c.te_cycles for c in per_stage.values())
+    )
+    assert tot.pe_cycles == pytest.approx(
+        sum(c.pe_cycles for c in per_stage.values())
+    )
+    assert tot.dma_cycles == pytest.approx(
+        sum(c.dma_cycles for c in per_stage.values())
+    )
+
+
+def test_cycle_attribution_engine_split():
+    scn = _small("siso-qam16-snr12")
+    classical = build_pipeline("classical", scn).total_cycles()
+    assert classical.te_cycles == 0  # classical chain is pure PE work
+    assert classical.pe_cycles > 0
+    for kind in ("deeprx", "cevit"):
+        tot = build_pipeline(kind, scn).total_cycles()
+        assert tot.te_cycles > 0  # neural receivers are TE workloads
+
+
+def test_tti_report_scales_with_batch():
+    scn = _small("siso-qam16-snr12")
+    rx = build_pipeline("classical", scn)
+    r1, r8 = rx.tti_report(batch=1), rx.tti_report(batch=8)
+    assert r8["concurrent_ms"] == pytest.approx(8 * r1["concurrent_ms"])
+    assert r8["tti_utilization"] > r1["tti_utilization"]
+
+
+def test_paper_scale_scenarios_fit_tti():
+    """Paper §II: one slot of the classical 4x8 chain and the CE-ViT CHE
+    must fit the 1 ms TTI on the modeled TensorPool."""
+    scn = get_scenario("mimo4x8-qam16-snr12")
+    for kind in ("classical", "cevit"):
+        rep = build_pipeline(kind, scn).tti_report(batch=1)
+        assert rep["fits_tti"], (kind, rep)

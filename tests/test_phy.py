@@ -72,12 +72,15 @@ def test_cevit_learns_to_beat_ls():
         h_hat = models.cevit_apply(p, mcfg, feats)
         return jnp.mean(jnp.abs(h_hat - h_true) ** 2)
 
+    from repro.optim import adamw
+
     @jax.jit
     def step(p, mom, key):
         feats, h_true, _ = batch_fn(key)
         l, g = jax.value_and_grad(loss_fn)(p, feats, h_true)
+        g, _ = adamw.clip_by_global_norm(g, 1.0)  # lr 0.02 unclipped NaNs
         mom = jax.tree.map(lambda m, gr: 0.9 * m + gr, mom, g)
-        p = jax.tree.map(lambda w, m: w - 0.02 * m, p, mom)
+        p = jax.tree.map(lambda w, m: w - 0.01 * m, p, mom)
         return p, mom, l
 
     key = KEY

@@ -19,6 +19,12 @@ def _compile(fn, *specs):
     return jax.jit(fn).lower(*specs).compile()
 
 
+def _cost(compiled) -> dict:
+    """cost_analysis() returns [dict] on older jax, dict on newer."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
 def test_xla_cost_analysis_undercounts_loops():
     """The documented caveat: flops(L=2) == flops(L=8) for scanned layers."""
 
@@ -34,7 +40,7 @@ def test_xla_cost_analysis_undercounts_loops():
     fl = {}
     for n in (2, 8):
         ws = jax.ShapeDtypeStruct((n, 128, 128), jnp.float32)
-        fl[n] = _compile(make(n), ws, x).cost_analysis()["flops"]
+        fl[n] = _cost(_compile(make(n), ws, x))["flops"]
     assert fl[2] == fl[8]  # loop body counted once regardless of trip count
 
 
@@ -50,7 +56,7 @@ def test_parser_matches_xla_on_unrolled(n_layers):
     x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
     c = _compile(f, ws, x)
     prof = profile_hlo(c.as_text())
-    xla = c.cost_analysis()["flops"]
+    xla = _cost(c)["flops"]
     analytic = n_layers * 2 * 64 * 128 * 128
     assert prof.dot_flops == pytest.approx(analytic, rel=1e-6)
     assert prof.dot_flops == pytest.approx(xla, rel=0.05)
