@@ -21,3 +21,19 @@ def time_jit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
+
+
+def emit_json(path: str, payload: dict):
+    """Write a bench's JSON emit (for docs/EXPERIMENTS.md regeneration).
+
+    Keys are sorted and floats should be pre-rounded by the caller so the
+    committed files produce stable diffs.
+    """
+    import json
+    import os
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")

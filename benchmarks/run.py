@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   fig10    — sequential vs concurrent TE+PE+DMA blocks      (paper Fig. 10)
   table2   — TensorPool vs TeraPool (accelerated vs PE-only)(paper Table II)
   phy_e2e  — 1 ms TTI / 6 TFLOPS / 4 MiB L1 budget checks   (paper §II)
+  phy_mc   — multi-cell sharded serving scaling sweep       (beyond-paper)
   roofline — per (arch x shape x mesh) dry-run roofline     (assignment §g)
 """
 import sys
@@ -21,6 +22,7 @@ def main() -> None:
         bench_parallel_gemm,
         bench_pe_kernels,
         bench_phy_e2e,
+        bench_phy_multicell,
         bench_roofline,
         bench_table2,
     )
@@ -32,6 +34,7 @@ def main() -> None:
         ("fig10", bench_concurrent),
         ("table2", bench_table2),
         ("phy_e2e", bench_phy_e2e),
+        ("phy_mc", bench_phy_multicell),
         ("roofline", bench_roofline),
     ]
     print("name,us_per_call,derived")

@@ -4,6 +4,9 @@ link scenarios, with per-stage TensorPool cycle attribution and the 1 ms
 TTI budget, plus batched multi-user serving.
 
     PYTHONPATH=src python examples/phy_uplink_pipeline.py
+
+For the multi-cell sharded serving path, see
+examples/phy_multicell_serve.py.
 """
 import jax
 

@@ -1,0 +1,74 @@
+"""Markdown link checker for the docs (stdlib only; CI docs job).
+
+Checks every ``[text](target)`` link in README.md and docs/*.md:
+
+* relative targets must exist on disk (anchors are stripped; a target
+  with only an anchor refers to the current file and is skipped);
+* absolute http(s) URLs are NOT fetched (CI must not depend on the
+  network) — they are only sanity-checked for an obvious scheme;
+* inline-code spans are ignored, so `build_pipeline(kind)` is not a link.
+
+Exit status 1 with a per-file listing when anything is broken.
+"""
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+FENCE_RE = re.compile(r"^(```|~~~)")
+
+FILES = ["README.md"] + sorted(glob.glob("docs/*.md"))
+
+
+def links_in(path):
+    out = []
+    in_fence = False
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            if FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(CODE_SPAN_RE.sub("", line)):
+                out.append((lineno, m.group(1)))
+    return out
+
+
+def check(path):
+    bad = []
+    base = os.path.dirname(path)
+    for lineno, target in links_in(path):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if "://" in target:
+            bad.append((lineno, target, "unknown scheme"))
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:  # same-file anchor
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
+            bad.append((lineno, target, "missing file"))
+    return bad
+
+
+def main():
+    missing_docs = [p for p in FILES if not os.path.exists(p)]
+    if missing_docs:
+        print(f"expected docs not found: {missing_docs}")
+        sys.exit(1)
+    failed = False
+    for path in FILES:
+        bad = check(path)
+        for lineno, target, why in bad:
+            failed = True
+            print(f"{path}:{lineno}: broken link {target!r} ({why})")
+    if failed:
+        sys.exit(1)
+    print(f"checked {len(FILES)} files, all links resolve")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,34 @@
-"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
-sweep JSONs. The narrative sections are maintained by hand in the template
-below; this script only refreshes the generated tables between the markers.
+"""Regenerate the generated tables in the docs from committed bench JSON.
+
+Sources -> targets:
+
+  experiments/phy/e2e.json        -> docs/EXPERIMENTS.md  (phy-e2e tables)
+  experiments/phy/multicell.json  -> docs/EXPERIMENTS.md  (multicell tables)
+  repro.phy.scenarios registry    -> docs/SCENARIOS.md    (scenario table)
+  experiments/dryrun/*.json       -> EXPERIMENTS.md       (legacy LM tables,
+                                     skipped when absent)
+
+Only the text between ``<!-- <marker>:begin -->`` / ``<!-- <marker>:end -->``
+pairs is rewritten; the narrative around the markers is maintained by hand.
+
+Usage (from the repo root, with ``PYTHONPATH=src``):
+
+  python scripts/make_experiments_md.py          # rewrite in place
+  python scripts/make_experiments_md.py --check  # exit 1 if any table is
+                                                 # stale (CI drift gate)
 """
+import argparse
 import glob
 import json
 import os
 import sys
 
 DRYRUN = "experiments/dryrun"
+PHY_E2E = "experiments/phy/e2e.json"
+PHY_MULTICELL = "experiments/phy/multicell.json"
 
 
-def load(d):
+def load_dryrun(d):
     out = []
     for p in sorted(glob.glob(os.path.join(d, "*.json"))):
         with open(p) as f:
@@ -23,6 +41,12 @@ def load(d):
 def fmt_bytes(b):
     return f"{b/1e9:.2f}"
 
+
+def _opt(v, fmt="{:.4f}"):
+    return fmt.format(v) if v is not None else "-"
+
+
+# -- legacy LM dry-run/roofline tables (root EXPERIMENTS.md) ----------------
 
 def dryrun_table(cells):
     rows = [
@@ -60,21 +84,204 @@ def roofline_table(cells, mesh="16x16"):
     return "\n".join(rows)
 
 
+# -- PHY end-to-end tables (docs/EXPERIMENTS.md) ----------------------------
+
+def phy_e2e_table(data):
+    rows = [
+        "| receiver | scenario | slots/s | µs/slot | BER | CHE-MSE | concurrent ms | TTI util | fits 1 ms |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in data["rows"]:
+        rows.append(
+            f"| {r['receiver']} | {r['scenario']} | {r['slots_per_sec']} | "
+            f"{r['us_per_slot']} | {_opt(r['ber'])} | {_opt(r['che_mse'])} | "
+            f"{r['concurrent_ms']:.4f} | {r['tti_utilization']:.4f} | "
+            f"{'yes' if r['fits_tti'] else 'NO'} |"
+        )
+    return "\n".join(rows)
+
+
+def phy_model_fit_table(data):
+    rows = [
+        "| receiver | scenario | params (fp16 KiB) | fits 4 MiB L1 | TFLOPS needed for TTI |",
+        "|---|---|---|---|---|",
+    ]
+    for r in data["rows"]:
+        if "params_fp16_kib" not in r:
+            continue
+        rows.append(
+            f"| {r['receiver']} | {r['scenario']} | {r['params_fp16_kib']} | "
+            f"{'yes' if r['fits_4mib_l1'] else 'NO'} | "
+            f"{r['required_tflops_for_tti']} |"
+        )
+    return "\n".join(rows)
+
+
+def phy_stage_table(data):
+    """Per-stage TE/PE/DMA kcycles of one classical and one neural chain."""
+    picks = [("classical", "mimo4x8-qam16-snr12"), ("cevit", "siso-qam16-snr12")]
+    rows = [
+        "| receiver | stage | TE kcyc | PE kcyc | DMA kcyc |",
+        "|---|---|---|---|---|",
+    ]
+    by_key = {(r["receiver"], r["scenario"]): r for r in data["rows"]}
+    for key in picks:
+        r = by_key.get(key)
+        if r is None:
+            continue
+        for name, c in r["stages"].items():
+            rows.append(
+                f"| {r['receiver']}/{r['scenario']} | {name} | "
+                f"{c['te_kcyc']} | {c['pe_kcyc']} | {c['dma_kcyc']} |"
+            )
+    return "\n".join(rows)
+
+
+def multicell_table(data):
+    rows = [
+        "| cells | batch | traffic | balance | mesh | groups | slots | steps | slots/s | BER | TTI util | stolen lanes |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in data["rows"]:
+        rows.append(
+            f"| {r['n_cells']} | {r['batch_size']} | {r['traffic']} | "
+            f"{r['balance']} | {r['mesh']} | {r['n_groups']} | "
+            f"{r['n_slots']} | {r['n_steps']} | {r['slots_per_sec']} | "
+            f"{_opt(r['ber'])} | {r['tti_utilization']:.4f} | "
+            f"{r['n_stolen']} |"
+        )
+    return "\n".join(rows)
+
+
+def multicell_percell_table(data):
+    row = next(
+        (r for r in data["rows"] if "single_cell_parity" in r), None
+    )
+    if row is None:
+        return "(no parity-checked config in the committed JSON)"
+    rows = [
+        "| cell | scenario | slots | slots/s | BER | TTI util |",
+        "|---|---|---|---|---|---|",
+    ]
+    for name, c in sorted(row["cells"].items()):
+        rows.append(
+            f"| {name} | {c['scenario']} | {c['n_slots']} | "
+            f"{c['slots_per_sec']} | {_opt(c['ber'])} | "
+            f"{c['tti_utilization']:.4f} |"
+        )
+    rows.append("")
+    rows.append(
+        f"Single-cell parity on this config: "
+        f"**{row['single_cell_parity']}** "
+        f"(max borderline-LLR bit flips per slot: {row['max_bit_flips']})."
+    )
+    return "\n".join(rows)
+
+
+# -- scenario catalogue (docs/SCENARIOS.md) ---------------------------------
+
+def scenario_table():
+    from repro.phy.scenarios import all_scenarios
+
+    rows = [
+        "| name | modulation | MIMO (tx×rx) | grid (sym×sc) | DMRS | SNR dB | Doppler ρ | description |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for s in all_scenarios():
+        g = s.grid
+        dmrs = (f"sym {list(g.pilot_symbols)}, stride {g.pilot_stride}"
+                + (f", {g.n_tx} combs" if g.n_tx > 1 else ""))
+        rows.append(
+            f"| `{s.name}` | {s.modulation} | {g.n_tx}×{g.n_rx} | "
+            f"{g.n_symbols}×{g.n_subcarriers} | {dmrs} | {s.snr_db:g} | "
+            f"{s.doppler_rho:g} | {s.description} |"
+        )
+    return "\n".join(rows)
+
+
+# -- splicing ---------------------------------------------------------------
+
+def splice(md, marker, content):
+    a, b = f"<!-- {marker}:begin -->", f"<!-- {marker}:end -->"
+    i, j = md.index(a) + len(a), md.index(b)
+    return md[:i] + "\n" + content + "\n" + md[j:]
+
+
+def regenerate(path, sections) -> str:
+    """Return ``path``'s content with every (marker, content) respliced."""
+    with open(path) as f:
+        md = f.read()
+    for marker, content in sections:
+        md = splice(md, marker, content)
+    return md
+
+
+def targets():
+    """[(path, regenerated content)] for every target whose sources exist."""
+    out = []
+    if os.path.exists("docs/EXPERIMENTS.md"):
+        # the two JSON sources are independent; each regenerates (and so
+        # the --check gate covers) only its own tables
+        sections = []
+        if os.path.exists(PHY_E2E):
+            with open(PHY_E2E) as f:
+                e2e = json.load(f)
+            sections += [
+                ("phy-e2e-table", phy_e2e_table(e2e)),
+                ("phy-model-fit-table", phy_model_fit_table(e2e)),
+                ("phy-stage-table", phy_stage_table(e2e)),
+            ]
+        if os.path.exists(PHY_MULTICELL):
+            with open(PHY_MULTICELL) as f:
+                mc = json.load(f)
+            sections += [
+                ("multicell-table", multicell_table(mc)),
+                ("multicell-percell-table", multicell_percell_table(mc)),
+            ]
+        if sections:
+            out.append(("docs/EXPERIMENTS.md",
+                        regenerate("docs/EXPERIMENTS.md", sections)))
+    if os.path.exists("docs/SCENARIOS.md"):
+        out.append(("docs/SCENARIOS.md",
+                    regenerate("docs/SCENARIOS.md",
+                               [("scenario-table", scenario_table())])))
+    # legacy LM tables (root EXPERIMENTS.md), kept for older checkouts
+    if os.path.isdir(DRYRUN) and os.path.exists("EXPERIMENTS.md"):
+        cells = load_dryrun(DRYRUN)
+        out.append(("EXPERIMENTS.md", regenerate("EXPERIMENTS.md", [
+            ("dryrun-table", dryrun_table(cells)),
+            ("roofline-16", roofline_table(cells, "16x16")),
+            ("roofline-mp", roofline_table(cells, "2x16x16")),
+        ])))
+    return out
+
+
 def main():
-    cells = load(DRYRUN)
-    md = open("EXPERIMENTS.md").read()
-
-    def splice(md, marker, content):
-        a, b = f"<!-- {marker}:begin -->", f"<!-- {marker}:end -->"
-        i, j = md.index(a) + len(a), md.index(b)
-        return md[:i] + "\n" + content + "\n" + md[j:]
-
-    md = splice(md, "dryrun-table", dryrun_table(cells))
-    md = splice(md, "roofline-16", roofline_table(cells, "16x16"))
-    md = splice(md, "roofline-mp", roofline_table(cells, "2x16x16"))
-    with open("EXPERIMENTS.md", "w") as f:
-        f.write(md)
-    print("EXPERIMENTS.md tables refreshed")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="verify the committed tables match the committed "
+                         "JSON; exit 1 on drift instead of rewriting")
+    args = ap.parse_args()
+    stale = []
+    for path, content in targets():
+        with open(path) as f:
+            on_disk = f.read()
+        if content == on_disk:
+            continue
+        if args.check:
+            stale.append(path)
+        else:
+            with open(path, "w") as f:
+                f.write(content)
+            print(f"{path}: tables refreshed")
+    if args.check:
+        if stale:
+            print("stale generated tables (re-run "
+                  "scripts/make_experiments_md.py and commit):")
+            for p in stale:
+                print(f"  {p}")
+            sys.exit(1)
+        print("generated tables are up to date")
 
 
 if __name__ == "__main__":

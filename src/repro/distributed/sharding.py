@@ -183,6 +183,40 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+# -- PHY cell-mesh serving -----------------------------------------------------
+#
+# Multi-cell slot serving (repro.serve.cell_mesh) stacks each scheduling
+# group's slots as (cell, batch, ...) and runs them on a (cell, batch) device
+# mesh: one logical lane per cell, slots data-parallel within the lane.  The
+# ``cell`` logical axis is the PHY sibling of the LM ``batch`` axis; the
+# ``batch`` rule additionally claims the PHY mesh's own ``batch`` axis so the
+# same rule set serves both mesh families.  spec_for's divisibility fallback
+# keeps this best-effort: a group whose lane count does not divide the cell
+# axis simply replicates instead of failing.
+
+ACT_RULES_PHY = dict(ACT_RULES, cell=("cell",), batch=("batch", "pod", "data"))
+
+
+def cell_slot_shardings(slot: dict, mesh: Mesh,
+                        batched_keys: tuple = ()) -> dict:
+    """NamedShardings for a (cell, batch, ...)-stacked link-slot dict.
+
+    Keys in ``batched_keys`` carry (cell, batch) leading dims; every other
+    key is per-cell side info with a single leading cell dim.
+    """
+    out = {}
+    for k, v in slot.items():
+        nd = getattr(v, "ndim", 0)
+        if k in batched_keys:
+            axes = ("cell", "batch") + (None,) * (nd - 2)
+        else:
+            axes = ("cell",) + (None,) * (nd - 1)
+        out[k] = NamedSharding(
+            mesh, spec_for(tuple(v.shape), axes, ACT_RULES_PHY, mesh)
+        )
+    return out
+
+
 # -- activation sharding constraints ------------------------------------------
 #
 # With scan-over-layers + FSDP param sharding, GSPMD propagation has two

@@ -61,9 +61,8 @@ def main():
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split("x"))
         axes = ("data", "model")[: len(shape)]
-        mesh = jax.make_mesh(
-            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
-        )
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(shape, axes)
         pshard = shd.param_shardings(model, mesh, mode=args.mode)
         state_sh = {"params": pshard,
                     "opt": shd.opt_state_shardings(pshard, mesh)}

@@ -1,3 +1,9 @@
+"""AI-native PHY: OFDM substrate, classical DSP, neural receivers, and the
+receiver-pipeline subsystem over the named scenario registry.
+
+See docs/ARCHITECTURE.md for the paper-structure -> module map and
+docs/SCENARIOS.md for the scenario catalogue + registration contract.
+"""
 from repro.phy import classical, link, models, ofdm, scenarios
 from repro.phy.link import (
     PIPELINE_BUILDERS, ReceiverPipeline, RxStage, build_pipeline,

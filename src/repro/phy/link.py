@@ -38,11 +38,16 @@ _C16 = 4  # bytes per complex64 element when streamed as 2 x fp16
 
 @dataclasses.dataclass(frozen=True)
 class RxStage:
-    """One receiver stage: compute-class + apply + cycle estimator."""
+    """One receiver stage: compute-class + apply + cycle estimator.
+
+    ``cycles`` may be None for stages without a TensorPool cost model
+    (e.g. experimental receivers); the pipeline's budget methods then
+    skip the stage and reports degrade gracefully.
+    """
     name: str
     compute: str  # dominant engine: "TE" | "PE" | "DMA"
     apply: Callable[[dict], dict]
-    cycles: Callable[[], pool.BlockCycles]
+    cycles: Optional[Callable[[], pool.BlockCycles]] = None
 
 
 def _sum_cycles(cs) -> pool.BlockCycles:
@@ -81,10 +86,16 @@ class ReceiverPipeline:
 
     # -- TensorPool budget ------------------------------------------------
     def stage_cycles(self) -> dict[str, pool.BlockCycles]:
-        return {st.name: st.cycles() for st in self.stages}
+        """Per-stage BlockCycles; stages without an estimator are skipped."""
+        return {
+            st.name: st.cycles() for st in self.stages
+            if st.cycles is not None
+        }
 
     def total_cycles(self) -> pool.BlockCycles:
-        return _sum_cycles(st.cycles() for st in self.stages)
+        return _sum_cycles(
+            st.cycles() for st in self.stages if st.cycles is not None
+        )
 
     def tti_report(self, batch: int = 1, clock_hz: float = 1e9,
                    tti_s: float = 1e-3) -> dict:

@@ -4,13 +4,22 @@ operator can imagine", AI-RAN workload diversity).
 A :class:`LinkScenario` fixes everything a receiver pipeline needs to be
 traced and budgeted: the OFDM grid (incl. MIMO dims), the modem, SNR, and
 channel dynamics.  Scenarios are registered by name so benchmarks, tests,
-and the serve engine all draw from the same catalogue.
+and the serve engines (single-cell and cell-mesh) all draw from the same
+catalogue.
+
+The registered catalogue and the contract a new scenario must meet are
+documented in docs/SCENARIOS.md (its table is generated from this registry
+by scripts/make_experiments_md.py).  Note that only (grid, modulation)
+shape the receive computation — SNR/Doppler affect slot *generation* and
+ride along inside the slot — which is what lets the multi-cell engine
+share one compiled pipeline across same-shape cells.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import jax
+import numpy as np
 
 from repro.phy import ofdm
 
@@ -37,6 +46,14 @@ class LinkScenario:
         g = self.grid
         return (g.n_symbols * g.n_subcarriers * g.n_tx
                 * self.modem.bits_per_symbol)
+
+    @property
+    def data_bits_per_slot(self) -> int:
+        """Payload bits per slot (data REs only — the BER denominator)."""
+        g = self.grid
+        union = np.asarray(ofdm.link_pilot_masks(g)).any(axis=0)
+        return int((union.size - union.sum()) * g.n_tx
+                   * self.modem.bits_per_symbol)
 
     def make_batch(self, key: jax.Array, batch: int) -> dict:
         """Simulate a batch of uplink slots of this scenario."""

@@ -1,2 +1,8 @@
+"""Serving engines: LM request batching (:class:`ServeEngine`), single-cell
+PHY slot serving (:class:`PhyServeEngine`), and multi-cell sharded PHY
+serving over a (cell, batch) device mesh (:class:`CellMeshEngine`)."""
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.phy_engine import PhyServeEngine, PhyServeReport, SlotRequest
+from repro.serve.cell_mesh import (
+    CellMeshEngine, CellSpec, MeshServeReport, cell,
+)

@@ -1,0 +1,436 @@
+"""Multi-cell sharded PHY slot serving over a jax device mesh.
+
+The paper places TensorPool inside a densified base-station fleet: one
+compute cluster multiplexes *many* cells' uplink traffic (AI-RAN style).
+This module scales :class:`repro.serve.phy_engine.PhyServeEngine` past one
+cell: a :class:`CellMeshEngine` instantiates N cells — each a registered
+scenario + receiver pipeline — and drains their slot queues through
+jit-sharded batched steps on a ``(cell, batch)`` device mesh
+(:func:`repro.launch.mesh.make_cell_mesh`), using the logical-axis rules in
+:mod:`repro.distributed.sharding` (``ACT_RULES_PHY``).
+
+Execution model
+---------------
+* Cells are partitioned into **shape groups** by (receiver kind, grid,
+  modulation, builder options).  All cells in a group share one
+  :class:`~repro.phy.link.ReceiverPipeline` — and therefore one compiled
+  executable — because nothing else about a scenario (SNR, Doppler,
+  description) changes the receive computation.
+* Each group step stacks slots as ``(n_lanes, batch, ...)`` and runs
+  ``jit(vmap(pipeline._apply))`` with the cell axis sharded across the
+  mesh's ``cell`` dimension and the slot batch across ``batch``.  Per-lane
+  numerics are identical to the single-cell engine.
+* Host->device staging is **double buffered**: while the device computes
+  step *i*, the host stacks and transfers step *i+1* (the serving-level
+  analogue of the paper's DMA/compute overlap).
+* A **load-imbalance policy** keeps lanes busy.  ``balance="steal"``
+  assigns lanes to the cells with the longest remaining queues each step
+  (a hot cell may occupy several lanes, lane-granular work stealing);
+  ``balance="pad"`` keeps one lane per cell and pads short lanes.
+  Stealing is lane-granular because a lane shares one scalar
+  ``noise_var`` — slots from different-SNR cells cannot mix in a lane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional, Union
+
+import jax
+import numpy as np
+
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_cell_mesh
+from repro.phy import link as _link
+from repro.phy.scenarios import LinkScenario, get_scenario
+from repro.serve.phy_engine import (
+    BATCHED_KEYS, PhyServeReport, SlotRequest,
+)
+
+TTI_S = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """Static description of one cell: scenario + receiver + options.
+
+    ``options`` is a sorted tuple of (key, value) pairs forwarded to
+    :func:`repro.phy.link.build_pipeline` — kept hashable so it can take
+    part in the shape-group key.
+    """
+    name: str
+    scenario: Union[str, LinkScenario]
+    receiver: str = "classical"
+    options: tuple = ()
+
+
+def cell(name: str, scenario: Union[str, LinkScenario],
+         receiver: str = "classical", **options) -> CellSpec:
+    """Convenience constructor: ``cell("c0", "siso-qam16-snr12", "cevit")``."""
+    return CellSpec(name, scenario, receiver, tuple(sorted(options.items())))
+
+
+@dataclasses.dataclass
+class _Cell:
+    spec: CellSpec
+    scenario: LinkScenario
+    queue: list = dataclasses.field(default_factory=list)
+    served: list = dataclasses.field(default_factory=list)
+    n_lane_steps: int = 0  # lanes this cell occupied across all steps
+
+
+@dataclasses.dataclass
+class _Lane:
+    """One mesh lane of one step: up to ``batch`` slots of a single cell."""
+    cell_idx: Optional[int]  # None = filler lane (results discarded)
+    reqs: list = dataclasses.field(default_factory=list)
+    pad: int = 0  # slots repeated from reqs[0] to reach the static batch
+
+
+class _Group:
+    """Cells sharing one pipeline/compiled step (same shapes + receiver)."""
+
+    def __init__(self, pipeline: _link.ReceiverPipeline,
+                 cell_idxs: list[int]):
+        self.pipeline = pipeline
+        self.cell_idxs = cell_idxs
+        self.step = jax.jit(jax.vmap(pipeline._apply))
+        self._metrics = jax.jit(jax.vmap(
+            lambda st: _link.slot_metrics(
+                st, pipeline.scenario, per_slot=True
+            )
+        ))
+        self.wall_s = 0.0
+        self.n_steps = 0
+        self.n_padded = 0
+        self.n_stolen = 0
+
+
+@dataclasses.dataclass
+class MeshServeReport:
+    """Aggregate + per-cell report of one multi-cell serving run.
+
+    ``tti_utilization`` is the modeled TensorPool budget of the run: each
+    group step costs its pipeline's concurrent-schedule milliseconds for a
+    ``batch_size`` lane, groups run back-to-back, and the whole figure is
+    normalized by the 1 ms TTI per step.  ``cells`` maps cell name to a
+    :class:`~repro.serve.phy_engine.PhyServeReport` whose numbers are
+    directly comparable to a single-cell run of the same traffic.
+    """
+    n_cells: int
+    n_groups: int
+    mesh_shape: tuple
+    balance: str
+    batch_size: int
+    n_slots: int
+    n_steps: int
+    wall_s: float
+    slots_per_sec: float
+    ber: Optional[float]
+    che_mse: Optional[float]
+    tti_utilization: float
+    fits_tti: bool
+    n_padded: int
+    n_stolen: int
+    cells: dict  # name -> PhyServeReport
+
+    def summary(self) -> str:
+        parts = [
+            f"mesh[{self.mesh_shape[0]}x{self.mesh_shape[1]}] "
+            f"{self.n_cells} cells/{self.n_groups} groups "
+            f"({self.balance}): {self.n_slots} slots in {self.wall_s:.3f}s "
+            f"({self.slots_per_sec:.1f} slots/s, batch={self.batch_size}, "
+            f"{self.n_steps} steps)"
+        ]
+        if self.ber is not None:
+            parts.append(f"BER={self.ber:.4f}")
+        if self.che_mse is not None:
+            parts.append(f"CHE-MSE={self.che_mse:.4f}")
+        parts.append(
+            f"TTI util={self.tti_utilization:.3f} (fits={self.fits_tti})"
+        )
+        if self.n_padded or self.n_stolen:
+            parts.append(
+                f"padded={self.n_padded} stolen_lanes={self.n_stolen}"
+            )
+        return "  ".join(parts)
+
+    def per_cell_summary(self) -> str:
+        return "\n".join(
+            f"  {name:16s} {rep.summary()}"
+            for name, rep in sorted(self.cells.items())
+        )
+
+
+class CellMeshEngine:
+    """Serve N cells' slot queues through sharded mesh steps.
+
+    Parameters
+    ----------
+    cells: CellSpec list (see :func:`cell`).  Cell names must be unique.
+    batch_size: slots per lane per step (static; short lanes are padded).
+    mesh: a ``(cell, batch)`` jax mesh; defaults to
+        :func:`make_cell_mesh` sized so every shape group shards evenly.
+    balance: "steal" (lane-granular work stealing, default) or "pad"
+        (one lane per cell, pad-only).
+    """
+
+    def __init__(self, cells: list[CellSpec], *, batch_size: int = 4,
+                 mesh=None, balance: str = "steal"):
+        if balance not in ("steal", "pad"):
+            raise ValueError(f"unknown balance policy {balance!r}")
+        names = [c.name for c in cells]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate cell names in {names}")
+        self.batch_size = batch_size
+        self.balance = balance
+        self.cells: list[_Cell] = []
+        for spec in cells:
+            scn = (get_scenario(spec.scenario)
+                   if isinstance(spec.scenario, str) else spec.scenario)
+            self.cells.append(_Cell(spec=spec, scenario=scn))
+
+        by_key: dict[tuple, list[int]] = {}
+        for i, c in enumerate(self.cells):
+            key = (c.spec.receiver, c.scenario.grid, c.scenario.modulation,
+                   c.spec.options)
+            by_key.setdefault(key, []).append(i)
+        self.groups: list[_Group] = []
+        for key, idxs in by_key.items():
+            first = self.cells[idxs[0]]
+            pipeline = _link.build_pipeline(
+                first.spec.receiver, first.scenario,
+                **dict(first.spec.options),
+            )
+            self.groups.append(_Group(pipeline, idxs))
+
+        if mesh is None:
+            lanes = math.gcd(*(len(g.cell_idxs) for g in self.groups)) \
+                if self.groups else 1
+            mesh = make_cell_mesh(lanes)
+        self.mesh = mesh
+        self._next_uid = 0
+
+    # -- traffic ----------------------------------------------------------
+    def _cell(self, name: str) -> _Cell:
+        for c in self.cells:
+            if c.spec.name == name:
+                return c
+        raise KeyError(
+            f"unknown cell {name!r}; have {[c.spec.name for c in self.cells]}"
+        )
+
+    def submit(self, cell_name: str, slot: dict,
+               user_id: Optional[int] = None) -> SlotRequest:
+        if user_id is None:
+            user_id = self._next_uid
+        self._next_uid = max(self._next_uid, user_id) + 1
+        req = SlotRequest(user_id=user_id, slot=slot)
+        self._cell(cell_name).queue.append(req)
+        return req
+
+    def submit_traffic(self, key: jax.Array,
+                       n_slots: Union[int, dict]) -> dict:
+        """Simulate per-cell arrivals.
+
+        ``n_slots`` is either one count for every cell or a
+        ``{cell_name: count}`` dict (use uneven counts to exercise the
+        balance policy).  Returns ``{cell_name: [SlotRequest, ...]}``.
+        """
+        if isinstance(n_slots, int):
+            n_slots = {c.spec.name: n_slots for c in self.cells}
+        out = {}
+        keys = jax.random.split(key, max(len(n_slots), 1))
+        for kc, (name, n) in zip(keys, sorted(n_slots.items())):
+            scn = self._cell(name).scenario
+            out[name] = [
+                self.submit(name, scn.make_batch(k, 1))
+                for k in (jax.random.split(kc, n) if n else [])
+            ]
+        return out
+
+    # -- scheduling -------------------------------------------------------
+    def _plan(self, group: _Group) -> list[list[_Lane]]:
+        """Partition the group's queued slots into steps of static lanes."""
+        B = self.batch_size
+        queues = {i: list(self.cells[i].queue) for i in group.cell_idxs
+                  if self.cells[i].queue}
+        for i in group.cell_idxs:
+            self.cells[i].queue = []
+        n_lanes = len(group.cell_idxs)
+        steps: list[list[_Lane]] = []
+        while queues:
+            lanes: list[_Lane] = []
+            if self.balance == "steal":
+                # hottest-queue-first lane assignment: a backlogged cell
+                # may occupy several lanes this step
+                for lane_j in range(n_lanes):
+                    if not queues:
+                        lanes.append(_Lane(cell_idx=None))
+                        continue
+                    i = max(queues, key=lambda i: len(queues[i]))
+                    take, queues[i] = queues[i][:B], queues[i][B:]
+                    if not queues[i]:
+                        del queues[i]
+                    if group.cell_idxs[lane_j] != i:
+                        group.n_stolen += 1
+                    lanes.append(_Lane(cell_idx=i, reqs=take,
+                                       pad=B - len(take)))
+            else:  # "pad": lane j always serves cell j
+                for i in group.cell_idxs:
+                    q = queues.get(i, [])
+                    take, rest = q[:B], q[B:]
+                    if rest:
+                        queues[i] = rest
+                    else:
+                        queues.pop(i, None)
+                    if take:
+                        lanes.append(_Lane(cell_idx=i, reqs=take,
+                                           pad=B - len(take)))
+                    else:
+                        lanes.append(_Lane(cell_idx=None))
+            # filler lanes replay the first real lane (results discarded)
+            donor = next(l for l in lanes if l.cell_idx is not None)
+            for j, l in enumerate(lanes):
+                if l.cell_idx is None:
+                    lanes[j] = _Lane(cell_idx=None, reqs=list(donor.reqs),
+                                     pad=donor.pad)
+            group.n_padded += sum(
+                l.pad for l in lanes if l.cell_idx is not None
+            )
+            steps.append(lanes)
+        return steps
+
+    # -- staging (host side; overlapped with device compute) --------------
+    def _stage(self, lanes: list[_Lane]) -> dict:
+        """Stack one step's slots to (n_lanes, batch, ...) sharded arrays."""
+        sample = lanes[0].reqs[0].slot
+        stacked = {}
+        for k in sample:
+            per_lane = []
+            for lane in lanes:
+                slots = [r.slot for r in lane.reqs]
+                slots = slots + [slots[0]] * lane.pad
+                if k in BATCHED_KEYS:
+                    per_lane.append(np.concatenate(
+                        [np.asarray(s[k]) for s in slots], axis=0
+                    ))
+                else:  # side info is per-cell, take it from the lane head
+                    per_lane.append(np.asarray(slots[0][k]))
+            stacked[k] = np.stack(per_lane, axis=0)
+        shardings = shd.cell_slot_shardings(
+            stacked, self.mesh, batched_keys=BATCHED_KEYS
+        )
+        return {
+            k: jax.device_put(v, shardings[k]) for k, v in stacked.items()
+        }
+
+    # -- serving ----------------------------------------------------------
+    def _record(self, group: _Group, lanes: list[_Lane], state: dict):
+        metrics = {
+            k: np.asarray(v) for k, v in group._metrics(state).items()
+        }  # each (n_lanes, batch)
+        for j, lane in enumerate(lanes):
+            if lane.cell_idx is None:
+                continue
+            c = self.cells[lane.cell_idx]
+            c.n_lane_steps += 1
+            for s, req in enumerate(lane.reqs):
+                req.metrics = {k: float(v[j, s]) for k, v in metrics.items()}
+                req.done = True
+                c.served.append(req)
+
+    def run(self, warmup: bool = True) -> MeshServeReport:
+        """Serve every queued slot on the mesh; returns the mesh report.
+
+        Each group's steps run back-to-back; within a group, host staging
+        of step *i+1* overlaps device compute of step *i*.  ``warmup=True``
+        runs each group's first step once untimed so throughput measures
+        the steady-state compiled executable.
+        """
+        for group in self.groups:
+            plan = self._plan(group)
+            if not plan:
+                continue
+            staged = self._stage(plan[0])
+            if warmup:
+                jax.block_until_ready(group.step(staged))
+            t_group = 0.0
+            for i, lanes in enumerate(plan):
+                t0 = time.perf_counter()
+                state = group.step(staged)  # async dispatch
+                staged = (self._stage(plan[i + 1])
+                          if i + 1 < len(plan) else None)
+                state = jax.block_until_ready(state)
+                t_group += time.perf_counter() - t0
+                self._record(group, lanes, state)
+            group.wall_s += t_group
+            group.n_steps += len(plan)
+        return self._report()
+
+    # -- reporting --------------------------------------------------------
+    def _cell_report(self, group: _Group, c: _Cell) -> PhyServeReport:
+        n = len(c.served)
+        bers = [r.metrics["ber"] for r in c.served if "ber" in r.metrics]
+        mses = [r.metrics["che_mse"] for r in c.served
+                if "che_mse" in r.metrics]
+        return PhyServeReport(
+            pipeline=group.pipeline.name,
+            scenario=c.scenario.name,
+            n_slots=n,
+            n_batches=c.n_lane_steps,
+            batch_size=self.batch_size,
+            wall_s=group.wall_s,
+            slots_per_sec=n / max(group.wall_s, 1e-9),
+            ber=float(np.mean(bers)) if bers else None,
+            che_mse=float(np.mean(mses)) if mses else None,
+            tti=group.pipeline.tti_report(batch=self.batch_size),
+            stage_cycles=group.pipeline.stage_cycles(),
+        )
+
+    def _report(self) -> MeshServeReport:
+        cells = {}
+        group_of = {i: g for g in self.groups for i in g.cell_idxs}
+        for i, c in enumerate(self.cells):
+            cells[c.spec.name] = self._cell_report(group_of[i], c)
+        n_slots = sum(r.n_slots for r in cells.values())
+        n_steps = sum(g.n_steps for g in self.groups)
+        wall = sum(g.wall_s for g in self.groups)
+        # modeled budget: group steps run back-to-back, one TTI per step
+        model_ms = sum(
+            g.n_steps
+            * g.pipeline.tti_report(batch=self.batch_size)["concurrent_ms"]
+            for g in self.groups
+        )
+        budget_ms = n_steps * TTI_S * 1e3
+        util = model_ms / budget_ms if budget_ms else 0.0
+
+        def slot_mean(metric):
+            # per-slot mean (slot-weighted, matching PhyServeEngine's
+            # aggregation), not a mean of per-cell means
+            pairs = [(getattr(r, metric), r.n_slots)
+                     for r in cells.values()
+                     if getattr(r, metric) is not None and r.n_slots]
+            total = sum(n for _, n in pairs)
+            if not total:
+                return None
+            return float(sum(v * n for v, n in pairs) / total)
+        return MeshServeReport(
+            n_cells=len(self.cells),
+            n_groups=len(self.groups),
+            mesh_shape=tuple(self.mesh.devices.shape),
+            balance=self.balance,
+            batch_size=self.batch_size,
+            n_slots=n_slots,
+            n_steps=n_steps,
+            wall_s=wall,
+            slots_per_sec=n_slots / max(wall, 1e-9),
+            ber=slot_mean("ber"),
+            che_mse=slot_mean("che_mse"),
+            tti_utilization=util,
+            fits_tti=bool(util <= 1.0),
+            n_padded=sum(g.n_padded for g in self.groups),
+            n_stolen=sum(g.n_stolen for g in self.groups),
+            cells=cells,
+        )

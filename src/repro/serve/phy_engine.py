@@ -6,6 +6,11 @@ fixed-size batches, so a single compiled end-to-end executable serves the
 whole cell's traffic.  The report carries throughput (slots/sec), link
 quality (BER / channel MSE), and the TensorPool TTI-budget utilization
 from the pipeline's cycle model.
+
+This is the single-cell building block; :mod:`repro.serve.cell_mesh`
+scales the same idiom to N cells sharded over a (cell, batch) device
+mesh, and its per-cell reports reuse :class:`PhyServeReport` so the two
+are directly comparable.
 """
 from __future__ import annotations
 
@@ -44,8 +49,8 @@ class PhyServeReport:
     slots_per_sec: float
     ber: Optional[float]
     che_mse: Optional[float]
-    tti: dict  # pipeline.tti_report(batch=batch_size)
-    stage_cycles: dict  # per-stage BlockCycles
+    tti: dict  # pipeline.tti_report(batch=batch_size); may be empty
+    stage_cycles: dict  # per-stage BlockCycles; may be empty
 
     def summary(self) -> str:
         parts = [
@@ -56,10 +61,12 @@ class PhyServeReport:
             parts.append(f"BER={self.ber:.4f}")
         if self.che_mse is not None:
             parts.append(f"CHE-MSE={self.che_mse:.4f}")
-        parts.append(
-            f"TTI util={self.tti['tti_utilization']:.3f} "
-            f"(fits={self.tti['fits_tti']})"
-        )
+        # pipelines without cycle estimators report no TTI budget
+        util = self.tti.get("tti_utilization") if self.tti else None
+        if util is not None:
+            parts.append(
+                f"TTI util={util:.3f} (fits={self.tti.get('fits_tti')})"
+            )
         return "  ".join(parts)
 
 

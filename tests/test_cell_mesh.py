@@ -1,0 +1,189 @@
+"""CellMeshEngine: multi-cell sharded PHY serving (grouping, balance
+policies, per-cell parity with the single-cell engine, sharding rules)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.phy import build_pipeline, ofdm
+from repro.phy.scenarios import get_scenario
+from repro.serve import CellMeshEngine, PhyServeEngine, cell
+
+KEY = jax.random.PRNGKey(0)
+
+_SISO = ofdm.GridConfig(
+    n_subcarriers=64, fft_size=64, n_taps=4, delay_spread=1.0
+)
+_MIMO = ofdm.GridConfig(
+    n_subcarriers=64, fft_size=64, n_taps=4, delay_spread=1.0,
+    n_tx=2, n_rx=2,
+)
+
+
+def _siso(name, snr_db=18.0):
+    return get_scenario("siso-qam16-snr12").replace(
+        grid=_SISO, snr_db=snr_db, name=name
+    )
+
+
+def _mimo(name, snr_db=8.0):
+    return get_scenario("mimo2x2-qpsk-snr8").replace(
+        grid=_MIMO, snr_db=snr_db, name=name
+    )
+
+
+def _four_cells():
+    return [
+        cell("c0", _siso("A")),
+        cell("c1", _siso("B", snr_db=24.0)),
+        cell("c2", _mimo("C")),
+        cell("c3", _mimo("D", snr_db=14.0)),
+    ]
+
+
+def test_cells_group_by_shape_not_by_snr():
+    eng = CellMeshEngine(_four_cells(), batch_size=2)
+    assert len(eng.cells) == 4
+    assert len(eng.groups) == 2  # SISO pair + MIMO pair, SNR ignored
+    sizes = sorted(len(g.cell_idxs) for g in eng.groups)
+    assert sizes == [2, 2]
+    # one pipeline (one compiled step) per group, shared by its cells
+    names = {g.pipeline.name for g in eng.groups}
+    assert len(names) == 2
+
+
+def test_mixed_cells_serve_and_report():
+    eng = CellMeshEngine(_four_cells(), batch_size=2)
+    reqs = eng.submit_traffic(KEY, {"c0": 3, "c1": 2, "c2": 2, "c3": 1})
+    rep = eng.run(warmup=False)
+    assert rep.n_cells == 4 and rep.n_groups == 2
+    assert rep.n_slots == 8
+    assert all(r.done for rs in reqs.values() for r in rs)
+    assert rep.slots_per_sec > 0
+    assert 0.0 <= rep.ber < 0.5
+    assert set(rep.cells) == {"c0", "c1", "c2", "c3"}
+    assert sum(r.n_slots for r in rep.cells.values()) == 8
+    assert "cells/2 groups" in rep.summary()
+    assert rep.per_cell_summary().count("\n") == 3
+    # per-cell TTI budget + cycle attribution present
+    for r in rep.cells.values():
+        assert 0.0 <= r.tti["tti_utilization"]
+        assert set(r.stage_cycles)  # classical stages
+
+
+def test_per_cell_parity_with_single_cell_engine():
+    """Acceptance: a cell served on the mesh == the same slots through
+    the single-cell PhyServeEngine.  Soft metrics agree to float32
+    rounding; hard decisions may flip only on borderline LLRs (at most
+    2 payload bits per slot)."""
+    cells = _four_cells()
+    eng = CellMeshEngine(cells, batch_size=2)
+    reqs = eng.submit_traffic(KEY, 2)
+    eng.run(warmup=False)
+    for spec in cells:
+        scn = spec.scenario
+        rx = build_pipeline("classical", scn)
+        single = PhyServeEngine(rx, batch_size=2)
+        mirror = [single.submit(r.slot) for r in reqs[spec.name]]
+        single.run(warmup=False)
+        for a, b in zip(reqs[spec.name], mirror):
+            flips = (abs(a.metrics["ber"] - b.metrics["ber"])
+                     * scn.data_bits_per_slot)
+            assert flips <= 2
+            for k in a.metrics:
+                if k == "ber":  # hard decisions: flip budget above
+                    continue
+                np.testing.assert_allclose(
+                    a.metrics[k], b.metrics[k], rtol=1e-3, atol=1e-4
+                )
+
+
+def test_steal_drains_hot_cell_in_fewer_steps():
+    specs = [cell("hot", _siso("A")), cell("cold", _siso("B"))]
+    traffic = {"hot": 8, "cold": 0}
+
+    steal = CellMeshEngine(specs, batch_size=2, balance="steal")
+    steal.submit_traffic(KEY, traffic)
+    rep_steal = steal.run(warmup=False)
+
+    pad = CellMeshEngine(specs, batch_size=2, balance="pad")
+    pad.submit_traffic(KEY, traffic)
+    rep_pad = pad.run(warmup=False)
+
+    # stealing gives the hot cell the idle cell's lane: 2 steps vs 4
+    assert rep_steal.n_steps == 2
+    assert rep_pad.n_steps == 4
+    assert rep_steal.n_stolen > 0 and rep_pad.n_stolen == 0
+    assert rep_steal.n_slots == rep_pad.n_slots == 8
+
+
+def test_pad_policy_pads_short_lanes():
+    specs = [cell("c0", _siso("A")), cell("c1", _siso("B"))]
+    eng = CellMeshEngine(specs, batch_size=4, balance="pad")
+    reqs = eng.submit_traffic(KEY, {"c0": 4, "c1": 1})
+    rep = eng.run(warmup=False)
+    assert rep.n_steps == 1
+    assert rep.n_padded == 3  # c1's lane padded 1 -> 4
+    assert all(r.done for rs in reqs.values() for r in rs)
+
+
+def test_neural_cells_share_group_params():
+    specs = [
+        cell("n0", _siso("A"), receiver="cevit"),
+        cell("n1", _siso("B", snr_db=24.0), receiver="cevit"),
+    ]
+    eng = CellMeshEngine(specs, batch_size=2)
+    assert len(eng.groups) == 1
+    assert eng.groups[0].pipeline.params is not None
+    reqs = eng.submit_traffic(KEY, 2)
+    rep = eng.run(warmup=False)
+    assert rep.n_slots == 4
+    assert all(r.done for rs in reqs.values() for r in rs)
+
+
+def test_receiver_and_options_split_groups():
+    specs = [
+        cell("a", _siso("A")),
+        cell("b", _siso("B"), receiver="cevit"),
+        cell("c", _siso("C"), mmse_smooth=False),
+    ]
+    eng = CellMeshEngine(specs, batch_size=2)
+    assert len(eng.groups) == 3
+
+
+def test_bad_inputs_raise():
+    with pytest.raises(ValueError):
+        CellMeshEngine([cell("x", _siso("A"))], balance="round-robin")
+    with pytest.raises(ValueError):
+        CellMeshEngine([cell("x", _siso("A")), cell("x", _siso("B"))])
+    eng = CellMeshEngine([cell("x", _siso("A"))])
+    with pytest.raises(KeyError):
+        eng.submit("nope", _siso("A").make_batch(KEY, 1))
+
+
+class FakeMesh:
+    """Shape-only stand-in (mirrors tests/test_sharding.py)."""
+
+    def __init__(self, shape, axes):
+        self.axis_names = axes
+        self.devices = np.empty(shape, dtype=object)
+
+
+def test_phy_act_rules_cell_axis_specs():
+    mesh = FakeMesh((4, 2), ("cell", "batch"))
+    # (cell, batch, ...) slot leaf: cell axis sharded, batch axis sharded
+    spec = shd.spec_for(
+        (4, 8, 14, 64), ("cell", "batch", None, None),
+        shd.ACT_RULES_PHY, mesh,
+    )
+    assert spec == P("cell", "batch", None, None)
+    # non-dividing lane count falls back to replicated (best-effort)
+    spec = shd.spec_for(
+        (3, 8, 14, 64), ("cell", "batch", None, None),
+        shd.ACT_RULES_PHY, mesh,
+    )
+    assert spec == P(None, "batch", None, None)
+    # per-cell side info only carries the cell axis
+    spec = shd.spec_for((4,), ("cell",), shd.ACT_RULES_PHY, mesh)
+    assert spec == P("cell")

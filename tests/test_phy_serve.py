@@ -76,6 +76,41 @@ def test_engine_serves_neural_pipeline():
     assert rep.ber is not None and rep.ber <= 0.65
 
 
+def test_report_summary_degrades_without_cycle_info():
+    """Regression: summary() crashed (KeyError) when a pipeline had no
+    cycle estimators and tti/stage_cycles came back empty."""
+    from repro.serve import PhyServeReport
+
+    rep = PhyServeReport(
+        pipeline="custom", scenario="s", n_slots=1, n_batches=1,
+        batch_size=1, wall_s=0.1, slots_per_sec=10.0, ber=0.01,
+        che_mse=None, tti={}, stage_cycles={},
+    )
+    s = rep.summary()
+    assert "slots/s" in s and "BER=0.0100" in s
+    assert "TTI" not in s  # no budget info -> no TTI clause
+
+
+def test_pipeline_without_cycle_estimators_serves():
+    """An RxStage may omit its cycle estimator; budget methods skip it."""
+    import dataclasses as _dc
+
+    from repro.phy import link
+
+    scn = _scn()
+    rx = build_pipeline("classical", scn)
+    stripped = link.ReceiverPipeline(
+        "nocycles", [_dc.replace(st, cycles=None) for st in rx.stages], scn
+    )
+    assert stripped.stage_cycles() == {}
+    assert stripped.total_cycles().sequential == 0.0
+    eng = PhyServeEngine(stripped, batch_size=2)
+    eng.submit_traffic(KEY, n_users=2)
+    rep = eng.run(warmup=False)
+    assert rep.stage_cycles == {}
+    assert "slots/s" in rep.summary()
+
+
 def test_engine_user_ids_unique_and_monotonic():
     scn = _scn()
     eng = PhyServeEngine(build_pipeline("classical", scn), batch_size=4)
