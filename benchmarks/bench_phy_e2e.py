@@ -22,16 +22,23 @@ from repro.serve import PhyServeEngine
 
 KEY = jax.random.PRNGKey(0)
 
-# (receiver, scenario) pairs spanning modulations, SISO + MIMO, Doppler
+# (label, builder kind, scenario, builder options) spanning modulations,
+# SISO + MIMO, Doppler — plus fused-vs-unfused classical pairs on the MIMO
+# scenarios (the fused classical-receiver kernels must win on slots/sec)
 CASES = [
-    ("classical", "siso-qpsk-snr5"),
-    ("classical", "siso-qam64-snr24"),
-    ("classical", "siso-qam16-doppler"),
-    ("classical", "mimo4x8-qam16-snr12"),
-    ("deeprx", "siso-qam16-snr12"),
-    ("deeprx", "mimo2x2-qam16-snr16"),
-    ("cevit", "siso-qam16-snr12"),
-    ("cevit", "mimo2x2-qpsk-snr8"),
+    ("classical", "classical", "siso-qpsk-snr5", {}),
+    ("classical", "classical", "siso-qam64-snr24", {}),
+    ("classical", "classical", "siso-qam16-doppler", {}),
+    ("classical", "classical", "mimo2x2-qam16-snr16", {}),
+    ("classical-fused", "classical", "mimo2x2-qam16-snr16",
+     {"fused": True}),
+    ("classical", "classical", "mimo4x8-qam16-snr12", {}),
+    ("classical-fused", "classical", "mimo4x8-qam16-snr12",
+     {"fused": True}),
+    ("deeprx", "deeprx", "siso-qam16-snr12", {}),
+    ("deeprx", "deeprx", "mimo2x2-qam16-snr16", {}),
+    ("cevit", "cevit", "siso-qam16-snr12", {}),
+    ("cevit", "cevit", "mimo2x2-qpsk-snr8", {}),
 ]
 
 BATCH = 4
@@ -39,9 +46,9 @@ N_USERS = 8
 JSON_PATH = "experiments/phy/e2e.json"
 
 
-def run_case(kind: str, scn_name: str) -> dict:
+def run_case(label: str, kind: str, scn_name: str, options: dict) -> dict:
     scn = get_scenario(scn_name)
-    rx = build_pipeline(kind, scn)
+    rx = build_pipeline(kind, scn, **options)
     engine = PhyServeEngine(rx, batch_size=BATCH)
     engine.submit_traffic(KEY, N_USERS)
     rep = engine.run()
@@ -49,14 +56,14 @@ def run_case(kind: str, scn_name: str) -> dict:
     tti = rep.tti
     quality = (f"ber={rep.ber:.4f}" if rep.ber is not None else "")
     emit(
-        f"phy_e2e/{kind}/{scn_name}", us_per_slot,
+        f"phy_e2e/{label}/{scn_name}", us_per_slot,
         f"slots_per_sec={rep.slots_per_sec:.1f} {quality} "
         f"tensorpool_concurrent_ms={tti['concurrent_ms']:.4f} "
         f"tti_util={tti['tti_utilization']:.3f} "
         f"within_tti={tti['fits_tti']}",
     )
     row = {
-        "receiver": kind,
+        "receiver": label,
         "scenario": scn_name,
         "slots_per_sec": round(rep.slots_per_sec, 1),
         "us_per_slot": round(us_per_slot, 1),
@@ -78,7 +85,7 @@ def run_case(kind: str, scn_name: str) -> dict:
     # per-stage TensorPool attribution (the paper's TE/PE split)
     for name, c in rep.stage_cycles.items():
         emit(
-            f"phy_e2e/{kind}/{scn_name}/stage/{name}", 0.0,
+            f"phy_e2e/{label}/{scn_name}/stage/{name}", 0.0,
             f"te_kcyc={c.te_cycles/1e3:.1f} "
             f"pe_kcyc={c.pe_cycles/1e3:.1f} "
             f"dma_kcyc={c.dma_cycles/1e3:.1f}",
@@ -90,7 +97,7 @@ def run_case(kind: str, scn_name: str) -> dict:
         te_flops = (rx.total_cycles().te_cycles
                     * pool.N_TES * pool.TE_MACS_PER_CYCLE * 0.67 * 2)
         emit(
-            f"phy_e2e/{kind}/{scn_name}/model", 0.0,
+            f"phy_e2e/{label}/{scn_name}/model", 0.0,
             f"params_fp16_KiB={pbytes/1024:.0f} "
             f"fits_4MiB_L1={pbytes < 4<<20} "
             f"required_tflops_for_tti={te_flops/1e-3/1e12:.2f}",
@@ -111,7 +118,7 @@ def main(json_default: str = ""):
     # parse_known_args: stay callable from the benchmarks.run driver,
     # whose own argv is not ours
     args, _ = ap.parse_known_args()
-    rows = [run_case(kind, scn) for kind, scn in CASES]
+    rows = [run_case(*case) for case in CASES]
     if args.json:
         emit_json(args.json, {
             "bench": "phy_e2e",

@@ -1,0 +1,207 @@
+"""Fused classical-receiver kernels vs the unfused references.
+
+Two views, shapes drawn from the registered scenario catalogue:
+
+* micro — the fused equalize→demap and LS-CHE kernels against their
+  unfused jnp oracles (`kernels/ref.py`) on raw slot tensors, with LLR
+  sign-agreement parity;
+* e2e — the whole classical pipeline (fused vs unfused) through the
+  `PhyServeEngine`, slots/sec + BER + modeled TensorPool schedule.
+
+Standalone runs write ``experiments/phy/rx_kernels.json``, from which
+``scripts/make_experiments_md.py`` regenerates the docs/EXPERIMENTS.md
+tables.
+
+Flags:
+  --smoke   scaled-down grids, fewer cases, asserts parity and that the
+            fused path is not slower — the CI kernel-regression gate;
+            writes no JSON.
+  --tune    run the block-shape autotuner for the catalogue's detect
+            shapes first and persist winners to the tune cache.
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, emit_json, time_jit
+from repro.kernels import ref, rx_fused, tune
+from repro.phy import build_pipeline, ofdm
+from repro.phy.scenarios import all_scenarios, get_scenario
+from repro.serve import PhyServeEngine
+
+KEY = jax.random.PRNGKey(0)
+BATCH = 4
+N_USERS = 8
+JSON_PATH = "experiments/phy/rx_kernels.json"
+
+# e2e serve comparison: the acceptance pair (2x2, 4x8) + a SISO control
+E2E_SCENARIOS = [
+    "mimo2x2-qam16-snr16",
+    "mimo4x8-qam16-snr12",
+    "siso-qam64-snr24",
+]
+
+_SMOKE = dict(n_subcarriers=64, fft_size=64, n_taps=4, delay_spread=1.0)
+
+
+def _scenarios(smoke: bool):
+    names = (["mimo2x2-qam16-snr16", "siso-qam16-snr12"] if smoke
+             else [s.name for s in all_scenarios()])
+    out = []
+    for n in names:
+        s = get_scenario(n)
+        if smoke:
+            s = s.replace(grid=dataclasses.replace(s.grid, **_SMOKE))
+        out.append(s)
+    return out
+
+
+def bench_micro(scn, iters: int) -> list[dict]:
+    cfg, modem = scn.grid, scn.modem
+    slot = scn.make_batch(KEY, BATCH)
+    y, nv = slot["y"], slot["noise_var"]
+    h = jnp.mean(slot["h"], axis=1)
+    rows = []
+
+    # fused equalize -> demap vs linalg-solve + demap oracle
+    fused = jax.jit(lambda y, h, nv: rx_fused.mmse_detect_demap(
+        y, h, nv, modem)[2])
+    unfused = jax.jit(lambda y, h, nv: ref.mmse_detect_demap_ref(
+        y, h, nv, modem)[2])
+    us_f = time_jit(fused, y, h, nv, iters=iters)
+    us_u = time_jit(unfused, y, h, nv, iters=iters)
+    sign = float(jnp.mean((fused(y, h, nv) > 0) == (unfused(y, h, nv) > 0)))
+    rows.append({
+        "scenario": scn.name, "op": "detect_demap",
+        "fused_us": round(us_f, 1), "unfused_us": round(us_u, 1),
+        "speedup": round(us_u / us_f, 2),
+        "llr_sign_agreement": round(sign, 5),
+    })
+    emit(
+        f"rx_kernels/detect_demap/{scn.name}", us_f,
+        f"unfused_us={us_u:.1f} speedup={us_u/us_f:.2f} sign={sign:.5f}",
+    )
+
+    # fused LS CHE vs mask-and-interp oracle
+    op = rx_fused.make_ls_interp_operator(
+        cfg.n_subcarriers, cfg.n_tx, cfg.pilot_stride,
+        np.asarray(ofdm.pilot_sequence(cfg)),
+    )
+    seq, masks = ofdm.pilot_sequence(cfg), ofdm.link_pilot_masks(cfg)
+    f_ls = jax.jit(lambda y: rx_fused.ls_che(
+        y, cfg.pilot_symbols, cfg.pilot_stride, op))
+    u_ls = jax.jit(lambda y: ref.ls_che_ref(y, seq, masks, cfg.pilot_stride))
+    us_f = time_jit(f_ls, y, iters=iters)
+    us_u = time_jit(u_ls, y, iters=iters)
+    err = float(jnp.max(jnp.abs(f_ls(y) - u_ls(y))))
+    rows.append({
+        "scenario": scn.name, "op": "ls_che",
+        "fused_us": round(us_f, 1), "unfused_us": round(us_u, 1),
+        "speedup": round(us_u / us_f, 2), "max_abs_err": round(err, 9),
+    })
+    emit(
+        f"rx_kernels/ls_che/{scn.name}", us_f,
+        f"unfused_us={us_u:.1f} speedup={us_u/us_f:.2f} err={err:.2e}",
+    )
+    return rows
+
+
+def bench_e2e(scn) -> dict:
+    row = {"scenario": scn.name}
+    hard = {}
+    for fused in (False, True):
+        rx = build_pipeline("classical", scn, fused=fused)
+        eng = PhyServeEngine(rx, batch_size=BATCH)
+        eng.submit_traffic(KEY, N_USERS)
+        rep = eng.run()
+        tag = "fused" if fused else "unfused"
+        row[f"{tag}_slots_per_sec"] = round(rep.slots_per_sec, 1)
+        row[f"{tag}_ber"] = round(rep.ber, 4)
+        row[f"{tag}_concurrent_ms"] = round(
+            rep.tti["concurrent_ms"], 4
+        )
+        state = rx.run(scn.make_batch(KEY, BATCH))
+        hard[tag] = np.asarray(state["llr"] > 0)
+    flips = int(
+        (hard["fused"] != hard["unfused"]).reshape(BATCH, -1).sum(1).max()
+    )
+    row["speedup"] = round(
+        row["fused_slots_per_sec"] / max(row["unfused_slots_per_sec"], 1e-9),
+        2,
+    )
+    row["max_bit_flips_per_slot"] = flips
+    emit(
+        f"rx_kernels/e2e/{scn.name}", 0.0,
+        f"fused_slots_s={row['fused_slots_per_sec']} "
+        f"unfused_slots_s={row['unfused_slots_per_sec']} "
+        f"speedup={row['speedup']} max_bit_flips={flips}",
+    )
+    return row
+
+
+def run_tune(scenarios):
+    for scn in scenarios:
+        g = scn.grid
+        det = tune.autotune_rx_detect(
+            BATCH, g.n_symbols, g.n_subcarriers, g.n_rx, g.n_tx, scn.modem,
+            iters=2,
+        )
+        ls = tune.autotune_rx_ls_che(
+            BATCH, g.n_symbols, g.n_subcarriers, g.n_rx, g.n_tx,
+            g.pilot_stride, g.pilot_symbols, iters=2,
+        )
+        emit(f"rx_kernels/tune/{scn.name}", 0.0,
+             f"detect_block_sc={det[0]} ls_block_rows={ls[0]}")
+    print(f"tune cache -> {tune.get_cache().path}")
+
+
+def main(json_default: str = ""):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=json_default,
+                    help="output JSON path ('' disables)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: small grids, assert parity + no "
+                         "fused-path regression, no JSON")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune detect tile shapes into the tune cache")
+    args, _ = ap.parse_known_args()
+
+    scenarios = _scenarios(args.smoke)
+    if args.tune:
+        run_tune(scenarios)
+    iters = 3 if args.smoke else 5
+    micro = [r for s in scenarios for r in bench_micro(s, iters)]
+    e2e = [] if args.smoke else [
+        bench_e2e(get_scenario(n)) for n in E2E_SCENARIOS
+    ]
+
+    if args.smoke:
+        bad = [r for r in micro if r.get("llr_sign_agreement", 1.0) < 0.999]
+        assert not bad, f"fused/unfused LLR parity broke: {bad}"
+        bad_ls = [r for r in micro if r.get("max_abs_err", 0.0) > 1e-3]
+        assert not bad_ls, f"fused LS-CHE diverged from the oracle: {bad_ls}"
+        slow = [
+            r for r in micro
+            if r["op"] == "detect_demap" and r["speedup"] < 0.8
+        ]
+        assert not slow, (
+            f"fused detect+demap regressed below the unfused path: {slow}"
+        )
+        print("smoke ok: parity holds, fused detect+demap is not slower")
+        return
+
+    if args.json:
+        emit_json(args.json, {
+            "bench": "rx_kernels",
+            "batch_size": BATCH,
+            "n_users": N_USERS,
+            "micro": micro,
+            "e2e": e2e,
+        })
+
+
+if __name__ == "__main__":
+    main(json_default=JSON_PATH)

@@ -3,6 +3,7 @@
 Sources -> targets:
 
   experiments/phy/e2e.json        -> docs/EXPERIMENTS.md  (phy-e2e tables)
+  experiments/phy/rx_kernels.json -> docs/EXPERIMENTS.md  (rx-kernels tables)
   experiments/phy/multicell.json  -> docs/EXPERIMENTS.md  (multicell tables)
   repro.phy.scenarios registry    -> docs/SCENARIOS.md    (scenario table)
   experiments/dryrun/*.json       -> EXPERIMENTS.md       (legacy LM tables,
@@ -25,6 +26,7 @@ import sys
 
 DRYRUN = "experiments/dryrun"
 PHY_E2E = "experiments/phy/e2e.json"
+PHY_RX_KERNELS = "experiments/phy/rx_kernels.json"
 PHY_MULTICELL = "experiments/phy/multicell.json"
 
 
@@ -137,6 +139,41 @@ def phy_stage_table(data):
     return "\n".join(rows)
 
 
+def rx_kernels_table(data):
+    """Fused-vs-reference microbenchmark of the classical-receiver kernels."""
+    rows = [
+        "| scenario | op | fused µs | unfused µs | speedup | parity |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in data["micro"]:
+        if "llr_sign_agreement" in r:
+            parity = f"LLR signs {r['llr_sign_agreement']*100:.2f}%"
+        else:
+            parity = f"max err {r['max_abs_err']:.1e}"
+        rows.append(
+            f"| {r['scenario']} | {r['op']} | {r['fused_us']} | "
+            f"{r['unfused_us']} | {r['speedup']}× | {parity} |"
+        )
+    return "\n".join(rows)
+
+
+def rx_e2e_table(data):
+    """Fused vs unfused classical pipeline through the serve engine."""
+    rows = [
+        "| scenario | fused slots/s | unfused slots/s | speedup | "
+        "BER fused/unfused | max bit flips/slot |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in data["e2e"]:
+        rows.append(
+            f"| {r['scenario']} | {r['fused_slots_per_sec']} | "
+            f"{r['unfused_slots_per_sec']} | {r['speedup']}× | "
+            f"{_opt(r['fused_ber'])} / {_opt(r['unfused_ber'])} | "
+            f"{r['max_bit_flips_per_slot']} |"
+        )
+    return "\n".join(rows)
+
+
 def multicell_table(data):
     rows = [
         "| cells | batch | traffic | balance | mesh | groups | slots | steps | slots/s | BER | TTI util | stolen lanes |",
@@ -230,6 +267,13 @@ def targets():
                 ("phy-e2e-table", phy_e2e_table(e2e)),
                 ("phy-model-fit-table", phy_model_fit_table(e2e)),
                 ("phy-stage-table", phy_stage_table(e2e)),
+            ]
+        if os.path.exists(PHY_RX_KERNELS):
+            with open(PHY_RX_KERNELS) as f:
+                rx = json.load(f)
+            sections += [
+                ("rx-kernels-table", rx_kernels_table(rx)),
+                ("rx-e2e-table", rx_e2e_table(rx)),
             ]
         if os.path.exists(PHY_MULTICELL):
             with open(PHY_MULTICELL) as f:

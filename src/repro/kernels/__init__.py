@@ -1,5 +1,7 @@
 """Pallas TPU kernels for the paper's compute hot-spots (TE GEMM, fused
-FC+softmax, flash MHA, depthwise-separable conv block).  Each kernel has a
-jitted wrapper in ops.py and a pure-jnp oracle in ref.py."""
-from repro.kernels import ops, ref
+FC+softmax, flash MHA, depthwise-separable conv block, and the fused
+classical-receiver family in rx_fused).  Each kernel has a jitted wrapper
+in ops.py and a pure-jnp oracle in ref.py; block shapes are resolved
+through the tune.py autotuner cache before static heuristics."""
+from repro.kernels import ops, ref, rx_fused, tune
 from repro.kernels.te_gemm import pick_block_shape

@@ -13,7 +13,9 @@ import jax
 from repro.kernels import dwconv_block as _dw
 from repro.kernels import fc_softmax as _fc
 from repro.kernels import mha as _mha
+from repro.kernels import rx_fused as _rx
 from repro.kernels import te_gemm as _te
+from repro.kernels import tune as _tune
 from repro.kernels.runtime import resolve_interpret
 
 
@@ -26,9 +28,45 @@ def te_gemm(x, w, bias=None, epilogue: str = "none", block_shape=None):
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv"))
-def mha(q, k, v, causal: bool = True, bq: int = 128, bkv: int = 128):
+def mha(q, k, v, causal: bool = True, bq=None, bkv=None):
+    if bq is None or bkv is None:
+        # tuned winner for this (shape, backend), else the static default;
+        # clamp to the lengths first (as te_gemm does), and ignore a stale
+        # choice that no longer divides them
+        sq, sk = q.shape[1], k.shape[1]
+        cached = _tune.cached_choice("mha", (q.shape[0], sq, sk, q.shape[2]))
+        tq, tkv = 128, 128
+        if cached and len(cached) == 2:
+            cq, ckv = min(cached[0], sq), min(cached[1], sk)
+            if sq % cq == 0 and sk % ckv == 0:
+                tq, tkv = cq, ckv
+        bq, bkv = bq or tq, bkv or tkv
     return _mha.mha(
         q, k, v, causal=causal, bq=bq, bkv=bkv,
+        interpret=resolve_interpret(None),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("modem", "block_sc", "use_pallas")
+)
+def mmse_detect_demap(y, h, noise_var, modem, block_sc=None,
+                      use_pallas=None):
+    """Fused equalize→demap: (x_hat, nv_eff, llr)."""
+    return _rx.mmse_detect_demap(
+        y, h, noise_var, modem, block_sc=block_sc, use_pallas=use_pallas,
+        interpret=resolve_interpret(None),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("pilot_symbols", "pilot_stride", "use_pallas"),
+)
+def ls_che(y, pilot_symbols, pilot_stride, op, use_pallas=None):
+    """Fused LS CHE against a precomputed interpolation operator."""
+    return _rx.ls_che(
+        y, pilot_symbols, pilot_stride, op, use_pallas=use_pallas,
         interpret=resolve_interpret(None),
     )
 

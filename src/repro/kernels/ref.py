@@ -41,6 +41,38 @@ def fc_softmax_ref(x, w, bias=None):
     return jax.nn.softmax(z, axis=-1).astype(x.dtype)
 
 
+def mmse_detect_demap_ref(y, h, noise_var, modem):
+    """Unfused oracle for the fused equalize→demap kernel: the production
+    linalg-solve detector + the modem's max-log demapper, composed — so the
+    oracle tracks whatever the unfused pipeline actually computes.
+
+    y (B, n_sym, n_sc, n_rx), h (B, n_sc, n_rx, n_tx); returns
+    (x_hat, nv_eff, llr) with the fused kernel's shapes.
+    (Lazy import: repro.phy imports this package at module load.)
+    """
+    from repro.phy.classical import mimo_mmse_detect_ext
+
+    b, n_sym, n_sc, n_rx = y.shape
+    n_tx = h.shape[-1]
+    hb = jnp.broadcast_to(
+        h[:, None], (b, n_sym, n_sc, n_rx, n_tx)
+    ).reshape(b * n_sym, n_sc, n_rx, n_tx)
+    x_hat, nv_eff = mimo_mmse_detect_ext(
+        y.reshape(b * n_sym, n_sc, n_rx), hb, noise_var
+    )
+    x_hat = x_hat.reshape(b, n_sym, n_sc, n_tx)
+    nv_eff = nv_eff.reshape(b, n_sym, n_sc, n_tx)
+    return x_hat, nv_eff, modem.demod_llr(x_hat, nv_eff)
+
+
+def ls_che_ref(y, pilot_seq, pilot_masks, pilot_stride: int):
+    """Mask-and-interp oracle for the fused LS-CHE kernel — the production
+    per-(rx, tx) staggered-comb LS + clamped linear interpolation."""
+    from repro.phy.classical import ls_channel_estimate_link
+
+    return ls_channel_estimate_link(y, pilot_seq, pilot_masks, pilot_stride)
+
+
 def dwconv_block_ref(x_padded, dw, pw, gamma, beta, eps: float = 1e-5):
     """x_padded: (B, H+2, W+2, C); returns (B, H, W, F)."""
     b, hp, wp, c = x_padded.shape

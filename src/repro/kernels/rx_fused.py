@@ -1,0 +1,473 @@
+"""Fused classical-receiver kernels (paper §V-B on the §III hardware).
+
+TensorPool's headline utilization comes from fusing the RAN tensor chain so
+intermediates stay in the 4 MiB L1.  These kernels give the *classical*
+receiver stages the same treatment the neural hot paths already get:
+
+* ``mmse_detect_demap`` — equalize→demap in one pass.  Per (batch-row,
+  subcarrier) tile it forms the regularized Gram matrix, solves the small
+  MMSE system (n_tx <= 4) in-register via explicit Gauss elimination, and
+  emits unbiased max-log LLRs — without ever materializing ``h_eff`` /
+  Gram / equalized-symbol grids in HBM.
+* ``ls_che`` — fused LS channel estimation: DMRS comb extract → per-pilot
+  divide → frequency interpolation, folded into one complex GEMM against a
+  precomputed interpolation operator (TE work instead of PE gather/lerp).
+
+Pallas has no complex dtype, so everything runs in a split-complex planar
+FP32 layout: real/imag components (and the small antenna dims) are stacked
+on the leading axis while (rows, subcarriers) occupy the tiled trailing
+axes.  The arithmetic lives in ``_detect_demap_core``, shared verbatim by
+
+* the Pallas kernel (compiled Mosaic on TPU, interpreter mode in tests), and
+* a plain-jnp path where XLA fuses the same element-wise chain — the fast
+  route off-TPU, since interpret-mode Pallas is orders of magnitude slower.
+
+``use_pallas=None`` auto-selects per backend (the same policy as
+``runtime.resolve_interpret``).  Subcarrier tile shapes are resolved
+through the :mod:`repro.kernels.tune` cache before static defaults.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tune
+from repro.kernels.runtime import compiler_params, resolve_interpret
+
+
+def _use_pallas(use_pallas: Optional[bool]) -> bool:
+    """None -> Pallas only where it compiles to Mosaic (TPU)."""
+    if use_pallas is None:
+        return jax.default_backend() == "tpu"
+    return use_pallas
+
+
+def _cmul(ar, ai, br, bi):
+    """(ar + i*ai) * (br + i*bi) in split-complex form."""
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+# ---------------------------------------------------------------------------
+# fused equalize -> demap: shared split-complex math
+# ---------------------------------------------------------------------------
+
+def _bit_of_table(n_levels: int, nb: int):
+    """bit_of[p][j]: bit p (MSB first) of the axis-level index j."""
+    return [[(j >> (nb - 1 - p)) & 1 for j in range(n_levels)]
+            for p in range(nb)]
+
+
+def _detect_demap_core(yr, yi, hr, hi, nv, levels: Sequence[float],
+                       norm: float, nb: int):
+    """One fused pass: Gram -> Gauss solve -> unbias -> max-log LLRs.
+
+    ``yr/yi`` are per-rx lists of arrays; ``hr/hi`` are [rx][tx] nested
+    lists broadcastable against them.  All loops below are over the static
+    antenna/constellation dims (n_tx <= 4, <= 8 levels), so the whole chain
+    unrolls into straight-line VPU code — every intermediate is a live
+    register tile, nothing round-trips through memory.
+
+    Returns (xr, xi, nve, llr): per-tx lists; ``llr[t]`` is the
+    2*nb per-bit list (real-axis bits first, matching ``Modem.demod_llr``).
+    """
+    n_rx, n_tx = len(yr), len(hr[0])
+    n_lv = len(levels)
+
+    # Gram G = H^H H and rhs b = H^H y
+    gr = [[None] * n_tx for _ in range(n_tx)]
+    gi = [[None] * n_tx for _ in range(n_tx)]
+    for t in range(n_tx):
+        for u in range(n_tx):
+            sr, si = 0.0, 0.0
+            for r in range(n_rx):
+                pr, pi = _cmul(hr[r][t], -hi[r][t], hr[r][u], hi[r][u])
+                sr, si = sr + pr, si + pi
+            gr[t][u], gi[t][u] = sr, si
+
+    # A = G + nv I; augmented RHS [H^H y | G] so one elimination yields both
+    # the filter output and the bias diagonal mu = diag(A^-1 G)
+    ar = [[gr[t][u] + nv if t == u else gr[t][u] + 0.0
+           for u in range(n_tx)] for t in range(n_tx)]
+    ai = [[gi[t][u] + 0.0 for u in range(n_tx)] for t in range(n_tx)]
+    nrhs = 1 + n_tx
+    br = [[None] * nrhs for _ in range(n_tx)]
+    bi = [[None] * nrhs for _ in range(n_tx)]
+    for t in range(n_tx):
+        sr, si = 0.0, 0.0
+        for r in range(n_rx):
+            pr, pi = _cmul(hr[r][t], -hi[r][t], yr[r], yi[r])
+            sr, si = sr + pr, si + pi
+        br[t][0], bi[t][0] = sr, si
+        for u in range(n_tx):
+            br[t][1 + u], bi[t][1 + u] = gr[t][u], gi[t][u]
+
+    # Gauss elimination, no pivoting (A is Hermitian positive definite)
+    for kd in range(n_tx):
+        dr, di = ar[kd][kd], ai[kd][kd]
+        den = dr * dr + di * di
+        ivr, ivi = dr / den, -di / den
+        for i in range(kd + 1, n_tx):
+            fr, fi = _cmul(ar[i][kd], ai[i][kd], ivr, ivi)
+            for u in range(kd, n_tx):
+                pr, pi = _cmul(fr, fi, ar[kd][u], ai[kd][u])
+                ar[i][u], ai[i][u] = ar[i][u] - pr, ai[i][u] - pi
+            for j in range(nrhs):
+                pr, pi = _cmul(fr, fi, br[kd][j], bi[kd][j])
+                br[i][j], bi[i][j] = br[i][j] - pr, bi[i][j] - pi
+    zr = [[None] * nrhs for _ in range(n_tx)]
+    zi = [[None] * nrhs for _ in range(n_tx)]
+    for kd in range(n_tx - 1, -1, -1):
+        dr, di = ar[kd][kd], ai[kd][kd]
+        den = dr * dr + di * di
+        ivr, ivi = dr / den, -di / den
+        for j in range(nrhs):
+            sr, si = br[kd][j], bi[kd][j]
+            for u in range(kd + 1, n_tx):
+                pr, pi = _cmul(ar[kd][u], ai[kd][u], zr[u][j], zi[u][j])
+                sr, si = sr - pr, si - pi
+            zr[kd][j], zi[kd][j] = _cmul(sr, si, ivr, ivi)
+
+    # unbias (mu_t = Re[A^-1 G]_tt) + per-axis max-log LLRs
+    scale = float(np.sqrt(norm))
+    bit_of = _bit_of_table(n_lv, nb)
+    xr, xi, nve, llr = [], [], [], []
+    for t in range(n_tx):
+        mu = jnp.clip(zr[t][1 + t], 1e-6, 1.0 - 1e-6)
+        ux, uy = zr[t][0] / mu, zi[t][0] / mu
+        ne = (1.0 - mu) / mu
+        nvs = jnp.maximum(ne * norm, 1e-6)
+        xr.append(ux)
+        xi.append(uy)
+        nve.append(ne)
+        bits = []
+        for comp in (ux, uy):
+            d = [(comp * scale - lv) ** 2 for lv in levels]
+            for p in range(nb):
+                d0 = d1 = None
+                for j in range(n_lv):
+                    if bit_of[p][j]:
+                        d1 = d[j] if d1 is None else jnp.minimum(d1, d[j])
+                    else:
+                        d0 = d[j] if d0 is None else jnp.minimum(d0, d[j])
+                bits.append((d0 - d1) / nvs)
+        llr.append(bits)
+    return xr, xi, nve, llr
+
+
+# ---------------------------------------------------------------------------
+# fused equalize -> demap: jnp path (off-TPU fast route)
+# ---------------------------------------------------------------------------
+
+def mmse_detect_demap_jnp(
+    y: jax.Array,  # (B, n_sym, n_sc, n_rx) complex
+    h: jax.Array,  # (B, n_sc, n_rx, n_tx) complex (flat in time)
+    noise_var: jax.Array,
+    modem,  # repro.phy.ofdm.Modem (duck-typed: levels/norm/bits_per_symbol)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused math on whole grids; XLA fuses the unrolled element-wise chain.
+
+    Returns (x_hat (B, n_sym, n_sc, n_tx), nv_eff, llr (..., n_tx, nb)).
+    """
+    n_rx, n_tx = y.shape[-1], h.shape[-1]
+    nb = modem.bits_per_symbol // 2
+    f32 = lambda v: v.astype(jnp.float32)
+    yr = [f32(jnp.real(y[..., r])) for r in range(n_rx)]
+    yi = [f32(jnp.imag(y[..., r])) for r in range(n_rx)]
+    # h broadcasts over the symbol axis — never materialized per-symbol
+    hr = [[f32(jnp.real(h[:, None, :, r, t])) for t in range(n_tx)]
+          for r in range(n_rx)]
+    hi = [[f32(jnp.imag(h[:, None, :, r, t])) for t in range(n_tx)]
+          for r in range(n_rx)]
+    xr, xi, nve, llr = _detect_demap_core(
+        yr, yi, hr, hi, noise_var, modem.levels, modem.norm, nb
+    )
+    shape = y.shape[:-1]
+    x_hat = jnp.stack([xr[t] + 1j * xi[t] for t in range(n_tx)], axis=-1)
+    nv_eff = jnp.stack(
+        [jnp.broadcast_to(nve[t], shape) for t in range(n_tx)], axis=-1
+    )
+    llr_out = jnp.stack(
+        [jnp.stack(llr[t], axis=-1) for t in range(n_tx)], axis=-2
+    )
+    return x_hat, nv_eff, llr_out
+
+
+# ---------------------------------------------------------------------------
+# fused equalize -> demap: Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _detect_demap_kernel(y_ref, h_ref, nv_ref, llr_ref, xh_ref, nve_ref, *,
+                         n_rx: int, n_tx: int, n_sym: int,
+                         levels: tuple, norm: float, nb: int):
+    """Grid: (batch, sc_tiles).  Blocks: y (2*n_rx, 1, n_sym, bs),
+    h (2*n_rx*n_tx, 1, 1, bs) — H broadcasts over symbols inside the tile,
+    the per-symbol h_eff grid never exists."""
+    nv = nv_ref[0, 0]
+    yr = [y_ref[r, 0] for r in range(n_rx)]  # (n_sym, bs)
+    yi = [y_ref[n_rx + r, 0] for r in range(n_rx)]
+    hr = [[h_ref[r * n_tx + t, 0] for t in range(n_tx)]
+          for r in range(n_rx)]  # (1, bs)
+    hi = [[h_ref[(n_rx + r) * n_tx + t, 0] for t in range(n_tx)]
+          for r in range(n_rx)]
+    xr, xi, nve, llr = _detect_demap_core(
+        yr, yi, hr, hi, nv, levels, norm, nb
+    )
+    bs = yr[0].shape[-1]
+    for t in range(n_tx):
+        xh_ref[t, 0] = xr[t]
+        xh_ref[n_tx + t, 0] = xi[t]
+        nve_ref[t, 0] = jnp.broadcast_to(nve[t], (n_sym, bs))
+        for p in range(2 * nb):
+            llr_ref[t * 2 * nb + p, 0] = llr[t][p]
+
+
+def _default_block_sc(n_sc: int) -> int:
+    for bs in (512, 256, 128, 64):
+        if n_sc % bs == 0 and bs <= n_sc:
+            return bs
+    return n_sc
+
+
+def mmse_detect_demap_pallas(
+    y: jax.Array,  # (B, n_sym, n_sc, n_rx) complex
+    h: jax.Array,  # (B, n_sc, n_rx, n_tx) complex
+    noise_var: jax.Array,
+    modem,
+    *,
+    block_sc: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    interpret = resolve_interpret(interpret)
+    b, n_sym, n_sc, n_rx = y.shape
+    n_tx = h.shape[-1]
+    nb = modem.bits_per_symbol // 2
+    levels = tuple(float(v) for v in modem.levels)
+    if block_sc is None:
+        cached = tune.cached_choice(
+            "rx_detect_demap", (n_sym, n_sc, n_rx, n_tx, len(levels))
+        )
+        block_sc = (cached[0] if cached and n_sc % cached[0] == 0
+                    else _default_block_sc(n_sc))
+    bs = min(block_sc, n_sc)
+    assert n_sc % bs == 0, f"n_sc={n_sc} not divisible by block_sc={bs}"
+
+    # split-complex planar layout: leading dims index (component, rx[, tx]),
+    # trailing (rows, subcarriers) are the tiled axes
+    f32 = jnp.float32
+    yp = jnp.stack([jnp.real(y), jnp.imag(y)], 0)  # (2, B, sym, sc, rx)
+    yp = jnp.moveaxis(yp, -1, 1).reshape(2 * n_rx, b, n_sym, n_sc)
+    hp = jnp.stack([jnp.real(h), jnp.imag(h)], 0)  # (2, B, sc, rx, tx)
+    hp = jnp.transpose(hp, (0, 3, 4, 1, 2)).reshape(
+        2 * n_rx * n_tx, b, 1, n_sc
+    )
+    nv2d = jnp.full((1, 1), noise_var, f32)
+
+    kernel = functools.partial(
+        _detect_demap_kernel, n_rx=n_rx, n_tx=n_tx, n_sym=n_sym,
+        levels=levels, norm=float(modem.norm), nb=nb,
+    )
+    nbits = 2 * nb
+    llr_p, xh_p, nve_p = pl.pallas_call(
+        kernel,
+        grid=(b, n_sc // bs),
+        in_specs=[
+            pl.BlockSpec((2 * n_rx, 1, n_sym, bs), lambda i, j: (0, i, 0, j)),
+            pl.BlockSpec((2 * n_rx * n_tx, 1, 1, bs),
+                         lambda i, j: (0, i, 0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_tx * nbits, 1, n_sym, bs),
+                         lambda i, j: (0, i, 0, j)),
+            pl.BlockSpec((2 * n_tx, 1, n_sym, bs), lambda i, j: (0, i, 0, j)),
+            pl.BlockSpec((n_tx, 1, n_sym, bs), lambda i, j: (0, i, 0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tx * nbits, b, n_sym, n_sc), f32),
+            jax.ShapeDtypeStruct((2 * n_tx, b, n_sym, n_sc), f32),
+            jax.ShapeDtypeStruct((n_tx, b, n_sym, n_sc), f32),
+        ],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(yp.astype(f32), hp.astype(f32), nv2d)
+
+    x_hat = jnp.moveaxis(xh_p[:n_tx] + 1j * xh_p[n_tx:], 0, -1)
+    nv_eff = jnp.moveaxis(nve_p, 0, -1)
+    llr = jnp.transpose(
+        llr_p.reshape(n_tx, nbits, b, n_sym, n_sc), (2, 3, 4, 0, 1)
+    )
+    return x_hat, nv_eff, llr
+
+
+def mmse_detect_demap(
+    y: jax.Array,
+    h: jax.Array,
+    noise_var: jax.Array,
+    modem,
+    *,
+    block_sc: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused MMSE equalize→demap; backend-dispatched (see module doc)."""
+    if _use_pallas(use_pallas):
+        return mmse_detect_demap_pallas(
+            y, h, noise_var, modem, block_sc=block_sc, interpret=interpret
+        )
+    return mmse_detect_demap_jnp(y, h, noise_var, modem)
+
+
+# ---------------------------------------------------------------------------
+# fused LS channel estimation
+# ---------------------------------------------------------------------------
+
+def make_ls_interp_operator(n_sc: int, n_tx: int, pilot_stride: int,
+                            seq: np.ndarray) -> jax.Array:
+    """(n_tx, n_p, n_sc) complex operator folding the per-pilot divide and
+    the clamped linear frequency interpolation into one GEMM:
+
+        H_ls[..., t] = ybar[comb_t] @ op[t]
+
+    where ``ybar`` is the pilot-symbol average of the received grid and
+    ``comb_t`` the stride-``pilot_stride * n_tx`` DMRS comb of tx ``t``.
+    Pilot sequences are unit power, so dividing by ``seq`` is multiplying
+    by its conjugate — which folds into the operator.
+    """
+    spacing = pilot_stride * n_tx
+    assert n_sc % spacing == 0, (
+        f"n_sc={n_sc} not a multiple of the comb spacing {spacing}"
+    )
+    n_p = n_sc // spacing
+    seq = np.asarray(seq)
+    pos = np.arange(n_sc, dtype=np.float64)
+    op = np.zeros((n_tx, n_p, n_sc), np.complex64)
+    for t in range(n_tx):
+        p_idx = np.arange(t * pilot_stride, n_sc, spacing)
+        xp = pos[p_idx]
+        for s in range(n_sc):
+            x = pos[s]
+            if x <= xp[0]:
+                w = {0: 1.0}
+            elif x >= xp[-1]:
+                w = {n_p - 1: 1.0}
+            else:
+                i = int(np.searchsorted(xp, x, side="right") - 1)
+                f = (x - xp[i]) / (xp[i + 1] - xp[i])
+                w = {i: 1.0 - f, i + 1: f}
+            for i, wt in w.items():
+                op[t, i, s] += wt * np.conj(seq[p_idx[i]])
+    return jnp.asarray(op)
+
+
+def _comb_extract(y: jax.Array, pilot_symbols: tuple, pilot_stride: int,
+                  n_tx: int) -> jax.Array:
+    """(B, n_psym, n_tx, n_p, n_rx) static strided gather of the DMRS REs."""
+    spacing = pilot_stride * n_tx
+    yp = y[:, jnp.asarray(pilot_symbols)]  # (B, n_psym, n_sc, n_rx)
+    return jnp.stack(
+        [yp[:, :, t * pilot_stride::spacing, :] for t in range(n_tx)], axis=2
+    )
+
+
+def ls_che_jnp(
+    y: jax.Array,  # (B, n_sym, n_sc, n_rx) complex
+    pilot_symbols: tuple,
+    pilot_stride: int,
+    op: jax.Array,  # (n_tx, n_p, n_sc) from make_ls_interp_operator
+) -> jax.Array:
+    n_tx = op.shape[0]
+    comb = jnp.mean(
+        _comb_extract(y, pilot_symbols, pilot_stride, n_tx), axis=1
+    )  # (B, n_tx, n_p, n_rx)
+    return jnp.einsum("btpr,tps->bsrt", comb, op)
+
+
+def _ls_che_kernel(yc_ref, opr_ref, o_ref, *, n_psym: int, n_tx: int):
+    """Grid: (row_tiles,).  Pilot-symbol average + split-complex interp GEMM
+    per tx; the per-pilot LS estimates never leave VMEM."""
+    inv = 1.0 / n_psym
+    for t in range(n_tx):
+        er = sum(yc_ref[p * n_tx + t] for p in range(n_psym)) * inv
+        ei = sum(yc_ref[(n_psym + p) * n_tx + t]
+                 for p in range(n_psym)) * inv  # (bm, n_p)
+        mr, mi = opr_ref[t], opr_ref[n_tx + t]  # (n_p, n_sc)
+        dot = lambda a, b: jnp.dot(a, b, preferred_element_type=jnp.float32)
+        o_ref[t] = dot(er, mr) - dot(ei, mi)
+        o_ref[n_tx + t] = dot(er, mi) + dot(ei, mr)
+
+
+def ls_che_pallas(
+    y: jax.Array,
+    pilot_symbols: tuple,
+    pilot_stride: int,
+    op: jax.Array,
+    *,
+    block_rows: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = resolve_interpret(interpret)
+    b, n_sym, n_sc, n_rx = y.shape
+    n_tx, n_p, _ = op.shape
+    n_psym = len(pilot_symbols)
+    rows = b * n_rx
+    if block_rows is None:
+        cached = tune.cached_choice("rx_ls_che", (n_sc, n_rx, n_tx, n_p))
+        block_rows = (cached[0] if cached and rows % cached[0] == 0
+                      else next((c for c in (64, 32, 16, 8, 4, 2, 1)
+                                 if rows % c == 0), rows))
+    bm = min(block_rows, rows)
+    assert rows % bm == 0
+
+    f32 = jnp.float32
+    comb = _comb_extract(y, pilot_symbols, pilot_stride, n_tx)
+    # (2, n_psym, n_tx, rows, n_p): component-major planar layout
+    yc = jnp.stack([jnp.real(comb), jnp.imag(comb)], 0)
+    yc = jnp.transpose(yc, (0, 2, 3, 1, 5, 4)).reshape(
+        2 * n_psym * n_tx, rows, n_p
+    )
+    opp = jnp.concatenate([jnp.real(op), jnp.imag(op)], 0)  # (2*n_tx, p, sc)
+
+    kernel = functools.partial(_ls_che_kernel, n_psym=n_psym, n_tx=n_tx)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows // bm,),
+        in_specs=[
+            pl.BlockSpec((2 * n_psym * n_tx, bm, n_p), lambda i: (0, i, 0)),
+            pl.BlockSpec((2 * n_tx, n_p, n_sc), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((2 * n_tx, bm, n_sc), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((2 * n_tx, rows, n_sc), f32),
+        compiler_params=compiler_params(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(yc.astype(f32), opp.astype(f32))
+
+    h = (out[:n_tx] + 1j * out[n_tx:]).reshape(n_tx, b, n_rx, n_sc)
+    return jnp.transpose(h, (1, 3, 2, 0))  # (B, n_sc, n_rx, n_tx)
+
+
+def ls_che(
+    y: jax.Array,
+    pilot_symbols: tuple,
+    pilot_stride: int,
+    op: jax.Array,
+    *,
+    block_rows: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused LS CHE (comb extract → divide → interp); backend-dispatched."""
+    if _use_pallas(use_pallas):
+        return ls_che_pallas(
+            y, pilot_symbols, pilot_stride, op,
+            block_rows=block_rows, interpret=interpret,
+        )
+    return ls_che_jnp(y, pilot_symbols, pilot_stride, op)

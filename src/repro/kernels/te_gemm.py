@@ -29,6 +29,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.balance import gemm_tile_balance, tile_vmem_bytes
 from repro.core.machine import TPU_V5E, Machine
+from repro.kernels import tune
 from repro.kernels.runtime import compiler_params, resolve_interpret
 
 
@@ -36,13 +37,20 @@ def pick_block_shape(
     m: int, n: int, k: int, dtype_bytes: int = 2,
     machine: Machine = TPU_V5E, vmem_budget: Optional[int] = None,
 ) -> tuple[int, int, int]:
-    """Kung-balanced, MXU-aligned (bm, bn, bk).
+    """Measured-or-modeled (bm, bn, bk).
 
-    Search multiples of 128 (MXU dimension / lane width: the 'burst' unit),
-    largest-first, requiring:
+    A winner persisted by the :mod:`repro.kernels.tune` autotuner for this
+    (shape, dtype, backend) takes precedence; otherwise fall back to the
+    static heuristic: search multiples of 128 (MXU dimension / lane width:
+    the 'burst' unit), largest-first, requiring:
       * double-buffered tile footprint <= VMEM budget (paper: X/W/Y buffers)
       * Kung's inequality (Eq. 2-3) holds for the HBM->VMEM stream
     """
+    cached = tune.cached_choice("te_gemm", (m, n, k), f"b{dtype_bytes}")
+    if cached is not None and len(cached) == 3:
+        bm, bn, bk = (min(c, d) for c, d in zip(cached, (m, n, k)))
+        if m % bm == 0 and n % bn == 0 and k % bk == 0:
+            return (bm, bn, bk)
     budget = vmem_budget or machine.fast_mem_bytes // 2
     cands = [512, 256, 128]
     best = None

@@ -1,0 +1,285 @@
+"""Block-shape autotuner for the Pallas kernels.
+
+The static ``pick_block_shape`` heuristic solves Kung's inequality from the
+machine constants — good on paper, but the best tiling on real hardware
+depends on compiler scheduling that no closed form captures.  This module
+measures: it times candidate tilings per (op, shape, dtype, backend) and
+persists the winner to a JSON cache that ``te_gemm`` / ``mha`` /
+``rx_fused`` consult before falling back to the heuristic.
+
+Cache entries are keyed by backend (``cpu`` / ``tpu`` / ``gpu``), so a
+cache tuned in interpret mode never leaks onto hardware and vice versa.
+
+Cache file format (JSON)::
+
+    {
+      "version": 1,
+      "entries": {
+        "te_gemm|512x512x512|b2|cpu": {
+          "choice": [256, 256, 128],
+          "us": 1234.5,
+          "n_candidates": 9
+        }
+      }
+    }
+
+The default path is ``~/.cache/repro-tensorpool/tune.json``; override with
+the ``REPRO_TUNE_CACHE`` environment variable or :func:`set_cache_path`
+(tests use a tmp path).  Lookups are tolerant: a missing/corrupt cache or a
+stale entry that no longer divides the problem shape is ignored.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+
+_ENV_VAR = "REPRO_TUNE_CACHE"
+_ORIG_ENV = os.environ.get(_ENV_VAR)  # restored by set_cache_path(None)
+_VERSION = 1
+
+
+def default_cache_path() -> str:
+    return os.environ.get(
+        _ENV_VAR,
+        os.path.join(
+            os.path.expanduser("~"), ".cache", "repro-tensorpool",
+            "tune.json",
+        ),
+    )
+
+
+def cache_key(op: str, shape: Sequence[int], extra: str = "",
+              backend: Optional[str] = None) -> str:
+    backend = backend or jax.default_backend()
+    dims = "x".join(str(int(d)) for d in shape)
+    return "|".join(p for p in (op, dims, extra, backend) if p)
+
+
+class TuneCache:
+    """Persistent (op, shape, dtype, backend) -> block-shape winners."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self._entries: Optional[dict] = None  # lazy
+
+    # -- persistence ------------------------------------------------------
+    def _load(self) -> dict:
+        if self._entries is None:
+            self._entries = {}
+            try:
+                with open(self.path) as f:
+                    data = json.load(f)
+                if isinstance(data, dict) and data.get("version") == _VERSION:
+                    self._entries = dict(data.get("entries", {}))
+            except (OSError, ValueError):
+                pass  # missing/corrupt cache == empty cache
+        return self._entries
+
+    def save(self):
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        payload = {"version": _VERSION, "entries": self._load()}
+        with open(self.path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    # -- access -----------------------------------------------------------
+    def lookup(self, key: str) -> Optional[tuple]:
+        ent = self._load().get(key)
+        if not ent or "choice" not in ent:
+            return None
+        return tuple(ent["choice"])
+
+    def store(self, key: str, choice: Sequence[int], us: float,
+              n_candidates: int = 0, save: bool = True):
+        self._load()[key] = {
+            "choice": [int(c) for c in choice],
+            "us": round(float(us), 1),
+            "n_candidates": int(n_candidates),
+        }
+        if save:
+            self.save()
+
+    def clear(self):
+        self._entries = {}
+
+
+_CACHE: Optional[TuneCache] = None
+
+
+def get_cache() -> TuneCache:
+    global _CACHE
+    if _CACHE is None or _CACHE.path != default_cache_path():
+        _CACHE = TuneCache()
+    return _CACHE
+
+
+def set_cache_path(path: Optional[str]):
+    """Point the process-wide cache at ``path``.
+
+    ``None`` restores the environment as it was at import time (an
+    operator-set ``REPRO_TUNE_CACHE`` survives a set/reset cycle).
+    """
+    global _CACHE
+    if path is None:
+        if _ORIG_ENV is None:
+            os.environ.pop(_ENV_VAR, None)
+        else:
+            os.environ[_ENV_VAR] = _ORIG_ENV
+    else:
+        os.environ[_ENV_VAR] = path
+    _CACHE = None
+
+
+def cached_choice(op: str, shape: Sequence[int],
+                  extra: str = "") -> Optional[tuple]:
+    """The persisted winner for (op, shape, extra) on this backend, if any."""
+    return get_cache().lookup(cache_key(op, shape, extra))
+
+
+# ---------------------------------------------------------------------------
+# timing + generic search
+# ---------------------------------------------------------------------------
+
+def _median_us(fn: Callable, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        out = fn()
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def autotune(op: str, shape: Sequence[int], candidates: Sequence[tuple],
+             run: Callable[[tuple], object], *, extra: str = "",
+             iters: int = 3, cache: Optional[TuneCache] = None) -> tuple:
+    """Time ``run(candidate)`` for every candidate, persist + return the
+    winner.  ``run`` must return a jax value (blocked on for timing)."""
+    assert candidates, f"no tiling candidates for {op} {shape}"
+    cache = cache or get_cache()
+    best = None
+    for cand in candidates:
+        us = _median_us(lambda: run(cand), iters=iters)
+        if best is None or us < best[0]:
+            best = (us, cand)
+    us, choice = best
+    cache.store(cache_key(op, shape, extra), choice, us,
+                n_candidates=len(candidates))
+    return choice
+
+
+# ---------------------------------------------------------------------------
+# per-op tuners (lazy kernel imports keep this module dependency-free)
+# ---------------------------------------------------------------------------
+
+def _divisor_cands(n: int, cands: Sequence[int]) -> list[int]:
+    out = [c for c in cands if c <= n and n % c == 0]
+    return out or [n]
+
+
+def autotune_gemm(m: int, n: int, k: int, dtype=None, *,
+                  iters: int = 3, cache: Optional[TuneCache] = None) -> tuple:
+    """Tune (bm, bn, bk) for ``te_gemm`` at (m, n, k) and persist it."""
+    import jax.numpy as jnp
+
+    from repro.core.balance import tile_vmem_bytes
+    from repro.core.machine import TPU_V5E
+    from repro.kernels import te_gemm as _te
+
+    dtype = dtype or jnp.bfloat16
+    dtype = jnp.dtype(dtype)
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, k), jnp.float32).astype(dtype)
+    w = jax.random.normal(kw, (k, n), jnp.float32).astype(dtype)
+    budget = TPU_V5E.fast_mem_bytes // 2
+    cands = [
+        (bm, bn, bk)
+        for bm in _divisor_cands(m, (512, 256, 128))
+        for bn in _divisor_cands(n, (512, 256, 128))
+        for bk in _divisor_cands(k, (512, 256, 128))
+        if tile_vmem_bytes(bm, bn, bk, dtype.itemsize) <= budget
+    ]
+    return autotune(
+        "te_gemm", (m, n, k), cands,
+        lambda c: _te.te_gemm(x, w, block_shape=c),
+        extra=f"b{dtype.itemsize}", iters=iters, cache=cache,
+    )
+
+
+def autotune_mha(bh: int, sq: int, sk: int, d: int, *, causal: bool = True,
+                 iters: int = 3, cache: Optional[TuneCache] = None) -> tuple:
+    """Tune (bq, bkv) for the flash-MHA kernel and persist it."""
+    import jax.numpy as jnp
+
+    from repro.kernels import mha as _mha
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (bh, s, d), jnp.float32)
+               for kk, s in zip(ks, (sq, sk, sk)))
+    cands = [
+        (bq, bkv)
+        for bq in _divisor_cands(sq, (256, 128))
+        for bkv in _divisor_cands(sk, (256, 128))
+    ]
+    return autotune(
+        "mha", (bh, sq, sk, d), cands,
+        lambda c: _mha.mha(q, k, v, causal=causal, bq=c[0], bkv=c[1]),
+        iters=iters, cache=cache,
+    )
+
+
+def autotune_rx_detect(batch: int, n_sym: int, n_sc: int, n_rx: int,
+                       n_tx: int, modem, *, iters: int = 3,
+                       cache: Optional[TuneCache] = None) -> tuple:
+    """Tune the subcarrier tile (bs,) of the fused detect+demap kernel."""
+    import jax.numpy as jnp
+
+    from repro.kernels import rx_fused as _rx
+
+    kk = jax.random.split(jax.random.PRNGKey(0), 4)
+    cplx = lambda k, shp: (jax.random.normal(k[0], shp)
+                           + 1j * jax.random.normal(k[1], shp))
+    y = cplx(kk[:2], (batch, n_sym, n_sc, n_rx))
+    h = cplx(kk[2:], (batch, n_sc, n_rx, n_tx))
+    nv = jnp.asarray(0.1, jnp.float32)
+    cands = [(bs,) for bs in _divisor_cands(n_sc, (512, 256, 128, 64))]
+    return autotune(
+        "rx_detect_demap", (n_sym, n_sc, n_rx, n_tx, len(modem.levels)),
+        cands,
+        lambda c: _rx.mmse_detect_demap_pallas(
+            y, h, nv, modem, block_sc=c[0]
+        )[2],
+        iters=iters, cache=cache,
+    )
+
+
+def autotune_rx_ls_che(batch: int, n_sym: int, n_sc: int, n_rx: int,
+                       n_tx: int, pilot_stride: int,
+                       pilot_symbols: tuple = (2, 11), *, iters: int = 3,
+                       cache: Optional[TuneCache] = None) -> tuple:
+    """Tune the row tile (bm,) of the fused LS-CHE interp-GEMM kernel."""
+    import numpy as np
+
+    from repro.kernels import rx_fused as _rx
+
+    kr, ki = jax.random.split(jax.random.PRNGKey(0))
+    shp = (batch, n_sym, n_sc, n_rx)
+    y = jax.random.normal(kr, shp) + 1j * jax.random.normal(ki, shp)
+    seq = np.exp(1j * (np.pi / 4 + np.pi / 2 * (np.arange(n_sc) % 4)))
+    op = _rx.make_ls_interp_operator(n_sc, n_tx, pilot_stride, seq)
+    rows = batch * n_rx
+    cands = [(bm,) for bm in _divisor_cands(rows, (64, 32, 16, 8, 4, 2))]
+    return autotune(
+        "rx_ls_che", (n_sc, n_rx, n_tx, op.shape[1]), cands,
+        lambda c: _rx.ls_che_pallas(
+            y, pilot_symbols, pilot_stride, op, block_rows=c[0]
+        ),
+        iters=iters, cache=cache,
+    )

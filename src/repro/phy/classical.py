@@ -15,6 +15,23 @@ def cfft(x: jax.Array, axis: int = -1) -> jax.Array:
     return jnp.fft.fft(x, axis=axis)
 
 
+def cfft_auto(x: jax.Array, axis: int = -1,
+              prefer_butterfly: bool = False) -> jax.Array:
+    """CFFT for any transform length — no failing assert, no padding.
+
+    The default is the native ``jnp.fft.fft`` (the fast path on every
+    backend).  ``prefer_butterfly=True`` routes radix-2-power lengths
+    through the paper-faithful :func:`cfft_radix2` PE formulation instead,
+    still falling back to ``jnp.fft.fft`` for any other length.
+    """
+    n = x.shape[axis]
+    if prefer_butterfly and n > 1 and n & (n - 1) == 0:
+        if axis in (-1, x.ndim - 1):
+            return cfft_radix2(x)
+        return jnp.moveaxis(cfft_radix2(jnp.moveaxis(x, axis, -1)), -1, axis)
+    return jnp.fft.fft(x, axis=axis)
+
+
 def cfft_radix2(x: jax.Array) -> jax.Array:
     """Iterative radix-2 DIT FFT over the last axis (power-of-two length).
 
@@ -83,17 +100,27 @@ def mmse_channel_estimate(
     return jnp.einsum("sk,bk->bs", w.T, h_ls)
 
 
+def _regularized_gram_rhs(
+    y: jax.Array,  # (B, n_sc, n_rx)
+    h: jax.Array,  # (B, n_sc, n_rx, n_tx)
+    noise_var: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared MMSE front end: (gram H^H H, A = gram + s2 I, rhs H^H y)."""
+    n_tx = h.shape[-1]
+    hh = jnp.conj(jnp.swapaxes(h, -1, -2))  # (B, n_sc, n_tx, n_rx)
+    gram = jnp.einsum("bstr,bsru->bstu", hh, h)
+    a = gram + noise_var * jnp.eye(n_tx, dtype=h.dtype)
+    rhs = jnp.einsum("bstr,bsr->bst", hh, y)
+    return gram, a, rhs
+
+
 def mimo_mmse_detect(
     y: jax.Array,  # (B, n_sc, n_rx)
     h: jax.Array,  # (B, n_sc, n_rx, n_tx)
     noise_var: jax.Array,
 ) -> jax.Array:
     """Per-subcarrier MMSE equalizer: x = (H^H H + s2 I)^-1 H^H y."""
-    n_tx = h.shape[-1]
-    hh = jnp.conj(jnp.swapaxes(h, -1, -2))  # (B, n_sc, n_tx, n_rx)
-    gram = jnp.einsum("bstr,bsru->bstu", hh, h)
-    a = gram + noise_var * jnp.eye(n_tx, dtype=h.dtype)
-    rhs = jnp.einsum("bstr,bsr->bst", hh, y)
+    _, a, rhs = _regularized_gram_rhs(y, h, noise_var)
     return jnp.linalg.solve(a, rhs[..., None])[..., 0]  # (B, n_sc, n_tx)
 
 
@@ -111,11 +138,7 @@ def mimo_mmse_detect_ext(
 
     Returns (x_hat_unbiased (B, n_sc, n_tx), nv_eff (B, n_sc, n_tx)).
     """
-    n_tx = h.shape[-1]
-    hh = jnp.conj(jnp.swapaxes(h, -1, -2))  # (B, n_sc, n_tx, n_rx)
-    gram = jnp.einsum("bstr,bsru->bstu", hh, h)
-    a = gram + noise_var * jnp.eye(n_tx, dtype=h.dtype)
-    rhs = jnp.einsum("bstr,bsr->bst", hh, y)
+    gram, a, rhs = _regularized_gram_rhs(y, h, noise_var)
     # one factorization for both the filter output and the bias diagonal
     sol = jnp.linalg.solve(a, jnp.concatenate([rhs[..., None], gram], -1))
     x_mmse = sol[..., 0]

@@ -28,8 +28,10 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import pool
+from repro.kernels import rx_fused
 from repro.phy import classical, models, ofdm
 from repro.phy.scenarios import LinkScenario
 
@@ -162,7 +164,9 @@ def _grid_bytes(cfg: ofdm.GridConfig, per_re: int = 1) -> float:
 
 def cfft_stage(cfg: ofdm.GridConfig) -> RxStage:
     def apply(state):
-        state["y"] = classical.cfft(state["y_time"], axis=2)
+        # length-agnostic dispatch: native FFT on any symbol length (the
+        # radix-2 PE butterfly stays opt-in via prefer_butterfly)
+        state["y"] = classical.cfft_auto(state["y_time"], axis=2)
         return state
 
     def cycles():
@@ -177,8 +181,46 @@ def cfft_stage(cfg: ofdm.GridConfig) -> RxStage:
     return RxStage("cfft", "PE", apply, cycles)
 
 
-def ls_che_stage(cfg: ofdm.GridConfig) -> RxStage:
+def ls_che_stage(cfg: ofdm.GridConfig, fused: bool = False) -> RxStage:
+    """LS CHE on the staggered DMRS combs.
+
+    ``fused=True`` routes through :mod:`repro.kernels.rx_fused`: comb
+    extract → per-pilot divide → frequency interpolation folded into one
+    complex GEMM against a precomputed operator — TE work with the
+    per-pilot estimates resident in L1, instead of the PE gather/lerp.
+    """
     seq = ofdm.pilot_sequence(cfg)
+    n_sc, n_psym = cfg.n_subcarriers, len(cfg.pilot_symbols)
+    if fused:
+        op = rx_fused.make_ls_interp_operator(
+            n_sc, cfg.n_tx, cfg.pilot_stride, np.asarray(seq)
+        )
+        n_p = op.shape[1]
+
+        def apply(state):
+            state["h_ls"] = rx_fused.ls_che(
+                state["y"], cfg.pilot_symbols, cfg.pilot_stride, op
+            )
+            return state
+
+        def cycles():
+            # split-complex interp GEMM on the TEs; pilot averaging on PEs
+            macs = 4.0 * cfg.n_rx * cfg.n_tx * n_p * n_sc
+            flops = 2.0 * n_psym * cfg.n_tx * n_p * cfg.n_rx
+            return pool.BlockCycles(
+                te_cycles=pool.te_cycles(macs, utilization=0.67),
+                pe_cycles=pool.pe_cycles(flops, ipc=0.7),
+                dma_cycles=pool.dma_cycles(
+                    # pilot symbols in + H out; the static operator is
+                    # per-scenario resident, the per-pilot LS grid never
+                    # round-trips
+                    n_psym * n_sc * cfg.n_rx * _C16
+                    + n_sc * cfg.n_rx * cfg.n_tx * _C16
+                ),
+            )
+
+        return RxStage("ls_che_fused", "TE", apply, cycles)
+
     masks = ofdm.link_pilot_masks(cfg)
 
     def apply(state):
@@ -188,8 +230,7 @@ def ls_che_stage(cfg: ofdm.GridConfig) -> RxStage:
         return state
 
     def cycles():
-        n_p_sym = len(cfg.pilot_symbols)
-        flops = (n_p_sym * cfg.n_subcarriers * cfg.n_rx * 10.0  # LS + avg
+        flops = (n_psym * cfg.n_subcarriers * cfg.n_rx * 10.0  # LS + avg
                  + cfg.n_subcarriers * cfg.n_rx * cfg.n_tx * 8.0)  # interp
         return pool.BlockCycles(
             te_cycles=0.0,
@@ -236,7 +277,55 @@ def _broadcast_h(h_est, n_sym):
     return hb.reshape(b * n_sym, n_sc, n_rx, n_tx)
 
 
-def detect_stage(cfg: ofdm.GridConfig) -> RxStage:
+def detect_demap_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem) -> RxStage:
+    """Fused equalize→demap (replaces detect_stage + demod_stage).
+
+    One :mod:`repro.kernels.rx_fused` pass per (batch, subcarrier) tile:
+    Gram, in-register Gauss solve, unbiasing, and max-log LLRs — the
+    ``h_eff`` / Gram / equalized-symbol grids stay in L1 instead of
+    round-tripping between two stages.
+    """
+
+    def apply(state):
+        h_est = state.get("h_hat", state.get("h_ls"))
+        x_hat, nv_eff, llr = rx_fused.mmse_detect_demap(
+            state["y"], h_est, state["noise_var"], modem
+        )
+        state["x_hat"], state["nv_eff"], state["llr"] = x_hat, nv_eff, llr
+        return state
+
+    def cycles():
+        t, r = cfg.n_tx, cfg.n_rx
+        lvl = 2 ** (modem.bits_per_symbol // 2)
+        per_re = (8.0 * (t * t * r + t ** 3 + t * r)  # gram+solve+rhs
+                  + t * lvl * 8.0)  # max-log demap
+        flops = cfg.n_symbols * cfg.n_subcarriers * per_re
+        return pool.BlockCycles(
+            te_cycles=0.0,
+            # fused straight-line inner loop: no intermediate loads/stores
+            # between gram/solve/demap -> better issue rate than the two
+            # separate stages (0.59 / 0.6)
+            pe_cycles=pool.pe_cycles(flops, ipc=0.8),
+            dma_cycles=pool.dma_cycles(
+                _grid_bytes(cfg, cfg.n_rx)  # y in
+                + cfg.n_subcarriers * cfg.n_rx * cfg.n_tx * _C16  # H in
+                + _grid_bytes(cfg, cfg.n_tx * modem.bits_per_symbol // 2)
+                # ^ LLRs out; x_hat / nv_eff / h_eff never leave L1
+            ),
+        )
+
+    return RxStage("detect_demap_fused", "PE", apply, cycles)
+
+
+def detect_stage(cfg: ofdm.GridConfig, fused: bool = False,
+                 modem: Optional[ofdm.Modem] = None) -> RxStage:
+    """MIMO-MMSE detection; ``fused=True`` (requires ``modem``) returns the
+    combined :func:`detect_demap_stage` — the demap rides inside it, so
+    builders must then skip :func:`demod_stage`."""
+    if fused:
+        assert modem is not None, "fused detect+demap needs the modem"
+        return detect_demap_stage(cfg, modem)
+
     def apply(state):
         h_est = state.get("h_hat", state.get("h_ls"))
         b, n_sym, n_sc, n_rx = state["y"].shape
@@ -392,14 +481,26 @@ def cevit_che_stage(cfg: ofdm.GridConfig, params,
 # ---------------------------------------------------------------------------
 
 def build_classical(scenario: LinkScenario, *, mmse_smooth: bool = True,
-                    **_) -> ReceiverPipeline:
-    """CFFT -> LS CHE [-> Wiener CHE] -> MIMO-MMSE detect -> LLR demod."""
+                    fused: bool = False, **_) -> ReceiverPipeline:
+    """CFFT -> LS CHE [-> Wiener CHE] -> MIMO-MMSE detect -> LLR demod.
+
+    ``fused=True`` serves the chain through the fused classical-receiver
+    kernels (:mod:`repro.kernels.rx_fused`): LS CHE as one interp GEMM and
+    detect+demap as one pass (Pallas on TPU, the same fused math as one
+    XLA-fused function elsewhere).
+    """
     cfg, modem = scenario.grid, scenario.modem
-    stages = [cfft_stage(cfg), ls_che_stage(cfg)]
+    stages = [cfft_stage(cfg), ls_che_stage(cfg, fused=fused)]
     if mmse_smooth:
         stages.append(mmse_che_stage(cfg))
-    stages += [detect_stage(cfg), demod_stage(cfg, modem)]
-    return ReceiverPipeline(f"classical/{scenario.name}", stages, scenario)
+    if fused:
+        stages.append(detect_stage(cfg, fused=True, modem=modem))
+    else:
+        stages += [detect_stage(cfg), demod_stage(cfg, modem)]
+    tag = "+fused" if fused else ""
+    return ReceiverPipeline(
+        f"classical{tag}/{scenario.name}", stages, scenario
+    )
 
 
 def build_deeprx(scenario: LinkScenario, *, params=None, channels: int = 32,
@@ -425,9 +526,14 @@ def build_deeprx(scenario: LinkScenario, *, params=None, channels: int = 32,
 
 def build_cevit(scenario: LinkScenario, *, params=None, d_model: int = 64,
                 heads: int = 4, layers: int = 2, d_ff: int = 128,
-                patch: int = 4, fused: bool = True,
+                patch: int = 4, fused: bool = True, fused_rx: bool = False,
                 seed: int = 0, **_) -> ReceiverPipeline:
-    """CFFT -> LS CHE -> CE-ViT CHE -> MIMO-MMSE detect -> LLR demod."""
+    """CFFT -> LS CHE -> CE-ViT CHE -> MIMO-MMSE detect -> LLR demod.
+
+    ``fused`` routes the neural CHE through the Pallas model kernels;
+    ``fused_rx`` additionally serves the classical detect+demap tail
+    through the fused receiver kernel.
+    """
     cfg, modem = scenario.grid, scenario.modem
     mcfg = models.CEViTConfig(
         d_model=d_model, heads=heads, layers=layers, d_ff=d_ff, patch=patch
@@ -437,8 +543,11 @@ def build_cevit(scenario: LinkScenario, *, params=None, d_model: int = 64,
     stages = [
         cfft_stage(cfg), ls_che_stage(cfg),
         cevit_che_stage(cfg, params, mcfg, fused=fused),
-        detect_stage(cfg), demod_stage(cfg, modem),
     ]
+    if fused_rx:
+        stages.append(detect_stage(cfg, fused=True, modem=modem))
+    else:
+        stages += [detect_stage(cfg), demod_stage(cfg, modem)]
     return ReceiverPipeline(
         f"cevit/{scenario.name}", stages, scenario, params=params
     )

@@ -62,6 +62,17 @@ class LinkScenario:
             doppler_rho=self.doppler_rho,
         )
 
+    def build(self, receiver: str = "classical", **options):
+        """Build a receiver pipeline for this scenario.
+
+        Builder options pass straight through — e.g.
+        ``scenario.build("classical", fused=True)`` serves the scenario
+        through the fused classical-receiver kernels.
+        """
+        from repro.phy.link import build_pipeline
+
+        return build_pipeline(receiver, self, **options)
+
     def replace(self, **kw) -> "LinkScenario":
         return dataclasses.replace(self, **kw)
 

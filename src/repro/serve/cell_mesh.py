@@ -67,7 +67,12 @@ class CellSpec:
 
 def cell(name: str, scenario: Union[str, LinkScenario],
          receiver: str = "classical", **options) -> CellSpec:
-    """Convenience constructor: ``cell("c0", "siso-qam16-snr12", "cevit")``."""
+    """Convenience constructor: ``cell("c0", "siso-qam16-snr12", "cevit")``.
+
+    Builder options ride along in the shape-group key, so e.g.
+    ``cell("c0", "mimo2x2-qam16-snr16", fused=True)`` serves that cell
+    through the fused classical-receiver kernels (its own compiled group).
+    """
     return CellSpec(name, scenario, receiver, tuple(sorted(options.items())))
 
 

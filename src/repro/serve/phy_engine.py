@@ -83,6 +83,24 @@ class PhyServeEngine:
         self._queue: list[SlotRequest] = []
         self._next_uid = 0
 
+    @classmethod
+    def from_scenario(cls, scenario, receiver: str = "classical",
+                      batch_size: int = 4, **options) -> "PhyServeEngine":
+        """Build the pipeline and the engine in one go.
+
+        ``scenario`` is a registered name or a LinkScenario; ``options``
+        pass through to the pipeline builder (e.g. ``fused=True`` to serve
+        the classical chain through the fused receiver kernels).
+        """
+        from repro.phy.scenarios import get_scenario
+
+        if isinstance(scenario, str):
+            scenario = get_scenario(scenario)
+        return cls(
+            _link.build_pipeline(receiver, scenario, **options),
+            batch_size=batch_size,
+        )
+
     # -- traffic ----------------------------------------------------------
     def submit(self, slot: dict, user_id: Optional[int] = None
                ) -> SlotRequest:
