@@ -1,0 +1,229 @@
+"""Coded-link benchmarks: SNR-vs-BLER waterfalls + decoder serving.
+
+Three views over the registered coded scenarios:
+
+* waterfall — each coded scenario swept over an SNR grid around its
+  operating point: coded BLER vs the uncoded symbol-error-derived BLER
+  ``1 - (1 - rawBER)^k_info`` at the same SNR (the coding gain the
+  acceptance gate checks), plus the measured mean decoder iterations
+  (the early-exit payoff rising with SNR);
+* micro — the layered min-sum decoder against the per-row numpy oracle
+  (`kernels/ref.py`): posterior/iteration parity and wall time;
+* serve — each coded scenario through the `PhyServeEngine`: slots/sec,
+  BLER, delivered payload bits/sec (goodput), decode effort, TTI budget.
+
+Standalone runs write ``experiments/phy/coding.json``, from which
+``scripts/make_experiments_md.py`` regenerates the docs/EXPERIMENTS.md
+tables.
+
+Flags:
+  --smoke   scaled-down code/grid, asserts decoder parity vs the oracle
+            and that the batched decoder is not slower — the CI
+            decode-regression gate; writes no JSON.
+  --tune    autotune the decoder batch tile into the tune cache first.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, emit_json, time_jit
+from repro.kernels import ldpc, ref, tune
+from repro.phy import build_pipeline, coding, slot_metrics
+from repro.phy.scenarios import all_scenarios, get_scenario
+from repro.serve import PhyServeEngine
+
+KEY = jax.random.PRNGKey(0)
+BATCH = 4
+N_USERS = 8
+JSON_PATH = "experiments/phy/coding.json"
+
+# SNR sweep (dB offsets from the scenario's operating point)
+SNR_OFFSETS = (-6.0, -3.0, 0.0, 3.0, 6.0)
+WATERFALL_SLOTS = 16
+
+_SMOKE = dict(n_subcarriers=64, fft_size=64, n_taps=4, delay_spread=1.0)
+
+
+def coded_scenarios(smoke: bool):
+    out = [s for s in all_scenarios() if s.coded]
+    if smoke:
+        out = [
+            s.replace(grid=dataclasses.replace(s.grid, **_SMOKE))
+            for s in out[:2]
+        ]
+    return out
+
+
+def bench_waterfall(scn, n_slots: int, offsets) -> dict:
+    """One scenario's BLER curve; returns the JSON row."""
+    points = []
+    for off in offsets:
+        s = scn.replace(snr_db=scn.snr_db + off)
+        rx = build_pipeline("classical", s)
+        blers, bers, iters = [], [], []
+        for i in range(0, n_slots, BATCH):
+            batch = s.make_batch(jax.random.PRNGKey(1000 + i), BATCH)
+            m = slot_metrics(rx.run(batch), s)
+            blers.append(float(m["bler"]))
+            bers.append(float(m["ber"]))
+            iters.append(float(m["decode_iters"]))
+        ber = float(np.mean(bers))
+        bler = float(np.mean(blers))
+        # a k_info-bit block with no code fails on any raw bit error
+        uncoded_bler = 1.0 - (1.0 - ber) ** scn.code.k_info
+        points.append({
+            "snr_db": round(s.snr_db, 1),
+            "bler": round(bler, 4),
+            "uncoded_bler": round(uncoded_bler, 4),
+            "raw_ber": round(ber, 4),
+            "decode_iters": round(float(np.mean(iters)), 2),
+        })
+        emit(
+            f"coding/waterfall/{scn.name}", 0.0,
+            f"snr={s.snr_db:g} bler={bler:.4f} "
+            f"uncoded={uncoded_bler:.4f} iters={np.mean(iters):.1f}",
+        )
+    return {
+        "scenario": scn.name,
+        "code": scn.code.name,
+        "rate": round(scn.code.rate, 4),
+        "k_info": scn.code.k_info,
+        "codewords_per_slot": coding.codewords_per_slot(scn),
+        "points": points,
+    }
+
+
+def bench_micro(scn, iters: int) -> dict:
+    """Batched decoder vs the numpy oracle on one scenario's LLR shapes."""
+    code = scn.code
+    n_cw = coding.codewords_per_slot(scn) * BATCH
+    kb, kn = jax.random.split(KEY)
+    bits = jax.random.bernoulli(
+        kb, 0.5, (n_cw, code.k)
+    ).astype(jnp.int32)
+    tx = coding.rate_match(code, coding.encode(code, bits))
+    noise = jax.random.normal(kn, tx.shape)
+    llr = coding.derate_match(code, (2.0 * tx - 1.0) * 2.0 + noise)
+
+    fast = jax.jit(lambda l: ldpc.ldpc_decode(l, code, use_pallas=False)[0])
+    us_f = time_jit(fast, llr, iters=iters)
+    t0 = time.perf_counter()
+    post_r, it_r = ref.ldpc_decode_ref(llr, code)
+    us_r = (time.perf_counter() - t0) * 1e6
+    post_f, it_f = ldpc.ldpc_decode(llr, code, use_pallas=False)
+    max_err = float(jnp.max(jnp.abs(post_f - post_r)))
+    iters_match = bool(jnp.all(it_f == it_r))
+    row = {
+        "scenario": scn.name,
+        "code": code.name,
+        "n_codewords": int(n_cw),
+        "batched_us": round(us_f, 1),
+        "oracle_us": round(us_r, 1),
+        "speedup": round(us_r / max(us_f, 1e-9), 2),
+        "max_abs_err": round(max_err, 6),
+        "iters_match": iters_match,
+    }
+    emit(
+        f"coding/decoder/{scn.name}", us_f,
+        f"oracle_us={us_r:.1f} speedup={row['speedup']} "
+        f"err={max_err:.2e} iters_match={iters_match}",
+    )
+    return row
+
+
+def bench_serve(scn) -> dict:
+    eng = PhyServeEngine.from_scenario(scn, batch_size=BATCH)
+    eng.submit_traffic(KEY, N_USERS)
+    rep = eng.run()
+    row = {
+        "scenario": scn.name,
+        "rate": round(scn.code.rate, 4),
+        "slots_per_sec": round(rep.slots_per_sec, 1),
+        "bler": round(rep.bler, 4),
+        "info_kbits_per_sec": round(rep.info_bits_per_sec / 1e3, 1),
+        "decode_iters": round(rep.decode_iters, 2),
+        "concurrent_ms": round(rep.tti["concurrent_ms"], 4),
+        "tti_utilization": round(rep.tti["tti_utilization"], 4),
+        "fits_tti": rep.tti["fits_tti"],
+    }
+    emit(
+        f"coding/serve/{scn.name}", 0.0,
+        f"slots_s={row['slots_per_sec']} bler={row['bler']} "
+        f"goodput_kbit_s={row['info_kbits_per_sec']} "
+        f"iters={row['decode_iters']}",
+    )
+    return row
+
+
+def run_tune(scenarios):
+    for scn in scenarios:
+        n_cw = coding.codewords_per_slot(scn) * BATCH
+        choice = tune.autotune_ldpc(n_cw, scn.code, iters=2)
+        emit(f"coding/tune/{scn.name}", 0.0, f"block_b={choice[0]}")
+    print(f"tune cache -> {tune.get_cache().path}")
+
+
+def main(json_default: str = ""):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=json_default,
+                    help="output JSON path ('' disables)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: small code/grid, assert oracle parity "
+                         "+ no decoder regression, no JSON")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune decoder batch tiles into the tune cache")
+    args, _ = ap.parse_known_args()
+
+    scenarios = coded_scenarios(args.smoke)
+    if args.tune:
+        run_tune(scenarios)
+    iters = 2 if args.smoke else 3
+    micro = [bench_micro(s, iters) for s in scenarios]
+
+    if args.smoke:
+        bad = [r for r in micro
+               if r["max_abs_err"] > 1e-3 or not r["iters_match"]]
+        assert not bad, f"decoder diverged from the oracle: {bad}"
+        slow = [r for r in micro if r["speedup"] < 1.0]
+        assert not slow, (
+            f"batched decoder regressed below the per-row oracle: {slow}"
+        )
+        # the coded chain must still converge end-to-end on a clean link
+        s = scenarios[0].replace(snr_db=scenarios[0].snr_db + 12.0)
+        m = slot_metrics(
+            build_pipeline("classical", s).run(s.make_batch(KEY, 2)), s
+        )
+        assert float(m["bler"]) <= 0.5, m
+        print("smoke ok: decoder parity holds, batched decode is faster, "
+              "coded chain converges")
+        return
+
+    waterfall = [
+        bench_waterfall(s, WATERFALL_SLOTS, SNR_OFFSETS) for s in scenarios
+    ]
+    serve = [bench_serve(s) for s in scenarios]
+
+    # the acceptance gate: coding gain at the operating SNR of every row
+    for row in waterfall:
+        op = next(p for p in row["points"] if abs(
+            p["snr_db"] - get_scenario(row["scenario"]).snr_db) < 1e-6)
+        assert op["bler"] < op["uncoded_bler"], (row["scenario"], op)
+
+    if args.json:
+        emit_json(args.json, {
+            "bench": "coding",
+            "batch_size": BATCH,
+            "n_users": N_USERS,
+            "waterfall_slots_per_point": WATERFALL_SLOTS,
+            "micro": micro,
+            "waterfall": waterfall,
+            "serve": serve,
+        })
+
+
+if __name__ == "__main__":
+    main(json_default=JSON_PATH)

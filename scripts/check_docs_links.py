@@ -1,4 +1,4 @@
-"""Markdown link checker for the docs (stdlib only; CI docs job).
+"""Markdown link + path checker for the docs (stdlib only; CI docs job).
 
 Checks every ``[text](target)`` link in README.md and docs/*.md:
 
@@ -7,6 +7,13 @@ Checks every ``[text](target)`` link in README.md and docs/*.md:
 * absolute http(s) URLs are NOT fetched (CI must not depend on the
   network) — they are only sanity-checked for an obvious scheme;
 * inline-code spans are ignored, so `build_pipeline(kind)` is not a link.
+
+Additionally, repo file paths mentioned in prose, inline code spans, and
+fenced code blocks (anything shaped like ``src/...py``, ``docs/FOO.md``,
+``scripts/x.py``, …) must exist in the tree — this catches stale module
+mentions after refactors, which plain link checking misses.  Paths are
+resolved against the repo root and against the referencing file's
+directory; either existing passes.
 
 Exit status 1 with a per-file listing when anything is broken.
 """
@@ -18,6 +25,16 @@ import sys
 LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
 CODE_SPAN_RE = re.compile(r"`[^`]*`")
 FENCE_RE = re.compile(r"^(```|~~~)")
+
+# repo-rooted path tokens: a whitelisted top-level dir followed by a
+# file-looking tail (an extension), or a top-level UPPERCASE.md file.
+# The dir whitelist keeps us from chasing user paths like ~/.cache/x.json.
+PATH_RE = re.compile(
+    r"(?<![\w./~-])"
+    r"((?:src|docs|scripts|benchmarks|examples|experiments|tests)"
+    r"/[A-Za-z0-9_./-]*[A-Za-z0-9_]\.[A-Za-z0-9_]+"
+    r"|[A-Z][A-Z0-9_]*\.md)"
+)
 
 FILES = ["README.md"] + sorted(glob.glob("docs/*.md"))
 
@@ -37,7 +54,24 @@ def links_in(path):
     return out
 
 
+def paths_in(path):
+    """Repo-path tokens anywhere in the file (prose, spans, and fences)."""
+    out = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            # a link's label is display text; only its target is a path
+            # claim (and the link checker already covers that)
+            line = LINK_RE.sub(lambda m: f"({m.group(1)})", line)
+            for m in PATH_RE.finditer(line):
+                tok = m.group(1)
+                if any(ch in tok for ch in "*<>{}$"):
+                    continue  # glob/template, not a concrete path
+                out.append((lineno, tok))
+    return out
+
+
 def check(path):
+    """-> (broken [(line, target, why)], number of path mentions)."""
     bad = []
     base = os.path.dirname(path)
     for lineno, target in links_in(path):
@@ -51,7 +85,15 @@ def check(path):
             continue
         if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
             bad.append((lineno, target, "missing file"))
-    return bad
+    mentions = paths_in(path)
+    for lineno, tok in mentions:
+        # repo-root-relative is the docs convention; file-relative also ok
+        if os.path.exists(tok):
+            continue
+        if os.path.exists(os.path.normpath(os.path.join(base, tok))):
+            continue
+        bad.append((lineno, tok, "missing path"))
+    return bad, len(mentions)
 
 
 def main():
@@ -60,14 +102,17 @@ def main():
         print(f"expected docs not found: {missing_docs}")
         sys.exit(1)
     failed = False
+    n_paths = 0
     for path in FILES:
-        bad = check(path)
+        bad, n = check(path)
+        n_paths += n
         for lineno, target, why in bad:
             failed = True
             print(f"{path}:{lineno}: broken link {target!r} ({why})")
     if failed:
         sys.exit(1)
-    print(f"checked {len(FILES)} files, all links resolve")
+    print(f"checked {len(FILES)} files ({n_paths} path mentions), "
+          "all links and paths resolve")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,7 @@ Sources -> targets:
   experiments/phy/e2e.json        -> docs/EXPERIMENTS.md  (phy-e2e tables)
   experiments/phy/rx_kernels.json -> docs/EXPERIMENTS.md  (rx-kernels tables)
   experiments/phy/multicell.json  -> docs/EXPERIMENTS.md  (multicell tables)
+  experiments/phy/coding.json     -> docs/EXPERIMENTS.md  (coding tables)
   repro.phy.scenarios registry    -> docs/SCENARIOS.md    (scenario table)
   experiments/dryrun/*.json       -> EXPERIMENTS.md       (legacy LM tables,
                                      skipped when absent)
@@ -28,6 +29,7 @@ DRYRUN = "experiments/dryrun"
 PHY_E2E = "experiments/phy/e2e.json"
 PHY_RX_KERNELS = "experiments/phy/rx_kernels.json"
 PHY_MULTICELL = "experiments/phy/multicell.json"
+PHY_CODING = "experiments/phy/coding.json"
 
 
 def load_dryrun(d):
@@ -215,21 +217,77 @@ def multicell_percell_table(data):
     return "\n".join(rows)
 
 
+# -- coded-link tables (docs/EXPERIMENTS.md) --------------------------------
+
+def coding_waterfall_table(data):
+    """SNR-vs-BLER waterfall: coded vs uncoded-derived BLER per scenario."""
+    rows = [
+        "| scenario | rate | SNR dB | coded BLER | uncoded BLER | raw BER | mean dec iters |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for w in data["waterfall"]:
+        for i, p in enumerate(w["points"]):
+            name = f"`{w['scenario']}`" if i == 0 else ""
+            rate = f"{w['rate']:g}" if i == 0 else ""
+            rows.append(
+                f"| {name} | {rate} | {p['snr_db']:g} | {p['bler']:.4f} | "
+                f"{p['uncoded_bler']:.4f} | {p['raw_ber']:.4f} | "
+                f"{p['decode_iters']} |"
+            )
+    return "\n".join(rows)
+
+
+def coding_decoder_table(data):
+    """Batched layered decoder vs the per-row numpy oracle."""
+    rows = [
+        "| scenario | code | codewords | batched µs | oracle µs | speedup | parity |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in data["micro"]:
+        parity = (f"max err {r['max_abs_err']:.1e}, iters "
+                  f"{'match' if r['iters_match'] else 'DIFFER'}")
+        rows.append(
+            f"| {r['scenario']} | {r['code']} | {r['n_codewords']} | "
+            f"{r['batched_us']} | {r['oracle_us']} | {r['speedup']}× | "
+            f"{parity} |"
+        )
+    return "\n".join(rows)
+
+
+def coding_serve_table(data):
+    """Coded scenarios through the serve engine: BLER + goodput + budget."""
+    rows = [
+        "| scenario | rate | slots/s | BLER | goodput kbit/s | dec iters | concurrent ms | TTI util | fits 1 ms |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in data["serve"]:
+        rows.append(
+            f"| {r['scenario']} | {r['rate']:g} | {r['slots_per_sec']} | "
+            f"{r['bler']:.4f} | {r['info_kbits_per_sec']} | "
+            f"{r['decode_iters']} | {r['concurrent_ms']:.4f} | "
+            f"{r['tti_utilization']:.4f} | "
+            f"{'yes' if r['fits_tti'] else 'NO'} |"
+        )
+    return "\n".join(rows)
+
+
 # -- scenario catalogue (docs/SCENARIOS.md) ---------------------------------
 
 def scenario_table():
     from repro.phy.scenarios import all_scenarios
 
     rows = [
-        "| name | modulation | MIMO (tx×rx) | grid (sym×sc) | DMRS | SNR dB | Doppler ρ | description |",
-        "|---|---|---|---|---|---|---|---|",
+        "| name | modulation | code | MIMO (tx×rx) | grid (sym×sc) | DMRS | SNR dB | Doppler ρ | description |",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
     for s in all_scenarios():
         g = s.grid
         dmrs = (f"sym {list(g.pilot_symbols)}, stride {g.pilot_stride}"
                 + (f", {g.n_tx} combs" if g.n_tx > 1 else ""))
+        code = (f"LDPC r={s.code.rate:g} ({s.code.k},{s.code.e_bits})"
+                if s.code else "—")
         rows.append(
-            f"| `{s.name}` | {s.modulation} | {g.n_tx}×{g.n_rx} | "
+            f"| `{s.name}` | {s.modulation} | {code} | {g.n_tx}×{g.n_rx} | "
             f"{g.n_symbols}×{g.n_subcarriers} | {dmrs} | {s.snr_db:g} | "
             f"{s.doppler_rho:g} | {s.description} |"
         )
@@ -281,6 +339,14 @@ def targets():
             sections += [
                 ("multicell-table", multicell_table(mc)),
                 ("multicell-percell-table", multicell_percell_table(mc)),
+            ]
+        if os.path.exists(PHY_CODING):
+            with open(PHY_CODING) as f:
+                cd = json.load(f)
+            sections += [
+                ("coding-waterfall-table", coding_waterfall_table(cd)),
+                ("coding-decoder-table", coding_decoder_table(cd)),
+                ("coding-serve-table", coding_serve_table(cd)),
             ]
         if sections:
             out.append(("docs/EXPERIMENTS.md",

@@ -73,6 +73,61 @@ def ls_che_ref(y, pilot_seq, pilot_masks, pilot_stride: int):
     return ls_channel_estimate_link(y, pilot_seq, pilot_masks, pilot_stride)
 
 
+def ldpc_decode_ref(llr, code, max_iters: int = 12, alpha: float = 0.8):
+    """Per-codeword numpy oracle for the layered min-sum LDPC decoder.
+
+    Independent of the batched core: plain per-layer loops, exact
+    min-excluding-self per edge, syndrome early exit at the top of each
+    iteration.  llr (B, n_mother) in the repo's log P(1)/P(0) convention;
+    returns (posterior LLRs, per-codeword iteration counts).
+    """
+    import numpy as np
+
+    layers = code.layers()
+    z = code.z
+    llr = np.asarray(llr, np.float32)
+    out = np.empty_like(llr)
+    iters_out = np.zeros(llr.shape[0], np.int32)
+
+    def syndrome_ok(v):
+        hard = (v < 0).astype(np.int32)
+        for edges in layers:
+            p = np.zeros(z, np.int32)
+            for c, s in edges:
+                p ^= np.roll(hard[c], -s)
+            if p.any():
+                return False
+        return True
+
+    for b in range(llr.shape[0]):
+        v = -llr[b].reshape(code.n_b, z).copy()
+        c2v = [np.zeros((len(e), z), np.float32) for e in layers]
+        n_it = 0
+        for _ in range(max_iters):
+            if syndrome_ok(v):
+                break
+            for li, edges in enumerate(layers):
+                t = np.stack(
+                    [np.roll(v[c], -s) for c, s in edges]
+                ) - c2v[li]
+                at = np.abs(t)
+                mag = np.empty_like(at)
+                for e in range(len(edges)):
+                    mag[e] = np.delete(at, e, axis=0).min(axis=0)
+                sg = np.where(t < 0.0, -1.0, 1.0).astype(np.float32)
+                upd = (alpha * np.prod(sg, axis=0) * sg * mag).astype(
+                    np.float32
+                )
+                vn = t + upd
+                for e, (c, s) in enumerate(edges):
+                    v[c] = np.roll(vn[e], s)
+                c2v[li] = upd
+            n_it += 1
+        out[b] = -v.reshape(-1)
+        iters_out[b] = n_it
+    return jnp.asarray(out), jnp.asarray(iters_out)
+
+
 def dwconv_block_ref(x_padded, dw, pw, gamma, beta, eps: float = 1e-5):
     """x_padded: (B, H+2, W+2, C); returns (B, H, W, F)."""
     b, hp, wp, c = x_padded.shape

@@ -260,6 +260,33 @@ def autotune_rx_detect(batch: int, n_sym: int, n_sc: int, n_rx: int,
     )
 
 
+def autotune_ldpc(batch: int, code, *, max_iters: int = 12,
+                  iters: int = 3, cache: Optional[TuneCache] = None) -> tuple:
+    """Tune the batch tile (bt,) of the layered LDPC decoder kernel."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ldpc as _ldpc
+    from repro.phy import coding as _coding
+
+    kb, kn = jax.random.split(jax.random.PRNGKey(0))
+    bits = jax.random.bernoulli(
+        kb, 0.5, (batch, code.k)
+    ).astype(jnp.int32)
+    cw = _coding.encode(code, bits)
+    noise = jax.random.normal(kn, cw.shape) * 0.7
+    llr = _coding.derate_match(
+        code, ((2.0 * cw - 1.0) * 3.0 + noise)[..., : code.e_bits]
+    )
+    cands = [(bt,) for bt in _divisor_cands(batch, (128, 64, 32, 16, 8, 4))]
+    return autotune(
+        "ldpc_decode", (code.k_b, code.m_b, code.z, max_iters), cands,
+        lambda c: _ldpc.ldpc_decode_pallas(
+            llr, code, max_iters=max_iters, block_b=c[0]
+        )[0],
+        iters=iters, cache=cache,
+    )
+
+
 def autotune_rx_ls_che(batch: int, n_sym: int, n_sc: int, n_rx: int,
                        n_tx: int, pilot_stride: int,
                        pilot_symbols: tuple = (2, 11), *, iters: int = 3,

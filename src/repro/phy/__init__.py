@@ -4,7 +4,8 @@ receiver-pipeline subsystem over the named scenario registry.
 See docs/ARCHITECTURE.md for the paper-structure -> module map and
 docs/SCENARIOS.md for the scenario catalogue + registration contract.
 """
-from repro.phy import classical, link, models, ofdm, scenarios
+from repro.phy import classical, coding, link, models, ofdm, scenarios
+from repro.phy.coding import CodeConfig, make_code
 from repro.phy.link import (
     PIPELINE_BUILDERS, ReceiverPipeline, RxStage, build_pipeline,
     slot_metrics,

@@ -13,7 +13,10 @@ stage declares
 The classical chain (CFFT -> LS/MMSE CHE -> MIMO-MMSE detect -> max-log
 LLR demod) and both neural receivers (DeepRx, CE-ViT + detect) are
 registered behind this one interface; the neural hot paths run through the
-fused Pallas kernels in :mod:`repro.kernels.ops`.
+fused Pallas kernels in :mod:`repro.kernels.ops`.  Coded scenarios append
+a CRC + LDPC decode stage (:mod:`repro.phy.coding`,
+:mod:`repro.kernels.ldpc`), so those chains run bits-in -> bits-out and
+are BLER-scored.
 
 Pipelines operate on the unified link-slot schema of
 :func:`repro.phy.ofdm.make_link_slot` (SISO through MIMO, static or
@@ -32,7 +35,7 @@ import numpy as np
 
 from repro.core import pool
 from repro.kernels import rx_fused
-from repro.phy import classical, models, ofdm
+from repro.phy import classical, coding, models, ofdm
 from repro.phy.scenarios import LinkScenario
 
 _C16 = 4  # bytes per complex64 element when streamed as 2 x fp16
@@ -150,6 +153,16 @@ def slot_metrics(state: dict, scenario: LinkScenario,
         m = data_mask[None, :, :, None].astype(jnp.float32)
         denom = jnp.sum(jnp.broadcast_to(m, e.shape), axis=red_axes(e))
         out["evm"] = jnp.sum(e * m, axis=red_axes(e)) / denom
+    if "info_bits_hat" in state and "info_bits" in state:
+        # coded link: block error rate over the slot's transport blocks
+        # (a block fails when any payload bit decodes wrong) + decode
+        # effort (layered min-sum iterations until the syndrome cleared)
+        blk = jnp.any(
+            state["info_bits_hat"] != state["info_bits"], axis=-1
+        ).astype(jnp.float32)  # (B, C)
+        out["bler"] = jnp.mean(blk, axis=red_axes(blk))
+        it = state["decode_iters"].astype(jnp.float32)
+        out["decode_iters"] = jnp.mean(it, axis=red_axes(it))
     return out
 
 
@@ -372,6 +385,55 @@ def demod_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem) -> RxStage:
     return RxStage("llr_demod", "PE", apply, cycles)
 
 
+def decode_stage(scenario: LinkScenario, *, max_iters: int = 12,
+                 alpha: float = 0.8) -> RxStage:
+    """CRC + LDPC decode of the slot's transport blocks (coded scenarios).
+
+    Gathers the data-RE LLRs in the canonical codeword order, de-rate-
+    matches (zero LLRs on the punctured tail) and runs the batched layered
+    min-sum decoder (:mod:`repro.kernels.ldpc` — Pallas on TPU, jnp
+    elsewhere), then CRC-checks the systematic part.  Adds
+    ``info_bits_hat`` / ``crc_ok`` / ``decode_iters`` to the state.
+
+    Cycle model: the min-sum sweeps are PE (VPU) work — per iteration each
+    edge costs ~8 ops over the z lanes, and the syndrome check ~2 — while
+    the GF(2) CRC matrix product rides the TEs.  The LLR state is
+    L1-resident across iterations, so DMA is one posterior-size round trip
+    per codeword, not one per iteration.  The budget charges ``max_iters/2``
+    iterations (layered decoding converges early at operating SNR; the
+    serve report carries the measured count).
+    """
+    code = scenario.code
+    assert code is not None, f"{scenario.name} has no channel code"
+    n_cw = coding.codewords_per_slot(scenario)
+
+    def apply(state):
+        state.update(
+            coding.decode_blocks(
+                scenario, state["llr"], max_iters=max_iters, alpha=alpha
+            )
+        )
+        return state
+
+    def cycles():
+        n_edges = sum(len(e) for e in code.layers())
+        iters_budget = max_iters / 2.0
+        sweep_flops = n_cw * iters_budget * n_edges * code.z * 8.0
+        syndrome_flops = n_cw * iters_budget * n_edges * code.z * 2.0
+        crc_macs = n_cw * code.k_info * code.crc_bits
+        return pool.BlockCycles(
+            te_cycles=pool.te_cycles(crc_macs, utilization=0.67),
+            pe_cycles=pool.pe_cycles(sweep_flops + syndrome_flops, ipc=0.7),
+            dma_cycles=pool.dma_cycles(
+                # LLRs in + posterior/bits out; the per-iteration state
+                # (v, check messages) never leaves L1
+                n_cw * code.n_mother * 4.0 + n_cw * code.k / 8.0
+            ),
+        )
+
+    return RxStage("ldpc_decode", "PE", apply, cycles)
+
+
 # -- neural stages ----------------------------------------------------------
 
 def deeprx_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem, params,
@@ -482,12 +544,14 @@ def cevit_che_stage(cfg: ofdm.GridConfig, params,
 
 def build_classical(scenario: LinkScenario, *, mmse_smooth: bool = True,
                     fused: bool = False, **_) -> ReceiverPipeline:
-    """CFFT -> LS CHE [-> Wiener CHE] -> MIMO-MMSE detect -> LLR demod.
+    """CFFT -> LS CHE [-> Wiener CHE] -> MIMO-MMSE detect -> LLR demod
+    [-> CRC+LDPC decode].
 
     ``fused=True`` serves the chain through the fused classical-receiver
     kernels (:mod:`repro.kernels.rx_fused`): LS CHE as one interp GEMM and
     detect+demap as one pass (Pallas on TPU, the same fused math as one
-    XLA-fused function elsewhere).
+    XLA-fused function elsewhere).  Coded scenarios terminate in the
+    decoder (bits out, BLER-scored) instead of raw LLRs.
     """
     cfg, modem = scenario.grid, scenario.modem
     stages = [cfft_stage(cfg), ls_che_stage(cfg, fused=fused)]
@@ -497,6 +561,8 @@ def build_classical(scenario: LinkScenario, *, mmse_smooth: bool = True,
         stages.append(detect_stage(cfg, fused=True, modem=modem))
     else:
         stages += [detect_stage(cfg), demod_stage(cfg, modem)]
+    if scenario.code is not None:
+        stages.append(decode_stage(scenario))
     tag = "+fused" if fused else ""
     return ReceiverPipeline(
         f"classical{tag}/{scenario.name}", stages, scenario
@@ -519,6 +585,8 @@ def build_deeprx(scenario: LinkScenario, *, params=None, channels: int = 32,
         cfft_stage(cfg), ls_che_stage(cfg),
         deeprx_stage(cfg, modem, params, dcfg, fused=fused),
     ]
+    if scenario.code is not None:
+        stages.append(decode_stage(scenario))
     return ReceiverPipeline(
         f"deeprx/{scenario.name}", stages, scenario, params=params
     )
@@ -548,6 +616,8 @@ def build_cevit(scenario: LinkScenario, *, params=None, d_model: int = 64,
         stages.append(detect_stage(cfg, fused=True, modem=modem))
     else:
         stages += [detect_stage(cfg), demod_stage(cfg, modem)]
+    if scenario.code is not None:
+        stages.append(decode_stage(scenario))
     return ReceiverPipeline(
         f"cevit/{scenario.name}", stages, scenario, params=params
     )

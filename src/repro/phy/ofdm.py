@@ -212,6 +212,19 @@ def pilot_sequence(cfg: GridConfig) -> jax.Array:
     )
 
 
+def link_pilot_masks_np(cfg: GridConfig) -> np.ndarray:
+    """Numpy twin of :func:`link_pilot_masks` for static (trace-time)
+    geometry: codeword/RE counting must not stage jnp ops under jit."""
+    spacing = cfg.pilot_stride * cfg.n_tx
+    sc = np.arange(cfg.n_subcarriers)
+    masks = np.zeros((cfg.n_tx, cfg.n_symbols, cfg.n_subcarriers), bool)
+    for t in range(cfg.n_tx):
+        comb = sc % spacing == t * cfg.pilot_stride
+        for sym in cfg.pilot_symbols:
+            masks[t, sym] = comb
+    return masks
+
+
 def link_pilot_masks(cfg: GridConfig) -> jax.Array:
     """(n_tx, n_symbols, n_subcarriers) bool: staggered per-tx DMRS combs.
 
@@ -219,14 +232,7 @@ def link_pilot_masks(cfg: GridConfig) -> jax.Array:
     t * stride`` of the pilot symbols; on another tx's comb it is silent,
     so per-(rx, tx) LS estimates are interference-free.
     """
-    spacing = cfg.pilot_stride * cfg.n_tx
-    sc = jnp.arange(cfg.n_subcarriers)
-    masks = jnp.zeros((cfg.n_tx, cfg.n_symbols, cfg.n_subcarriers), bool)
-    for t in range(cfg.n_tx):
-        comb = sc % spacing == t * cfg.pilot_stride
-        for sym in cfg.pilot_symbols:
-            masks = masks.at[t, sym].set(comb)
-    return masks
+    return jnp.asarray(link_pilot_masks_np(cfg))
 
 
 def make_link_slot(
@@ -236,6 +242,7 @@ def make_link_slot(
     batch: int,
     snr_db: float,
     doppler_rho: float = 1.0,
+    bits=None,
 ):
     """Simulate one uplink slot of the unified link schema (SISO..MIMO).
 
@@ -247,12 +254,17 @@ def make_link_slot(
       bits   (B, n_sym, n_sc, n_tx, bits_per_symbol),
     and unbatched side info: noise_var (scalar), pilot_seq (n_sc,),
     pilot_masks (n_tx, n_sym, n_sc), data_mask (n_sym, n_sc).
+
+    ``bits`` injects pre-drawn payload bits of that grid shape (the coded
+    path in :mod:`repro.phy.coding` lays codewords onto the data REs);
+    None draws i.i.d. uncoded bits.
     """
     nb = modem.bits_per_symbol
     kb, kc, kn = jax.random.split(key, 3)
-    bits = jax.random.bernoulli(
-        kb, 0.5, (batch, cfg.n_symbols, cfg.n_subcarriers, cfg.n_tx, nb)
-    ).astype(jnp.int32)
+    if bits is None:
+        bits = jax.random.bernoulli(
+            kb, 0.5, (batch, cfg.n_symbols, cfg.n_subcarriers, cfg.n_tx, nb)
+        ).astype(jnp.int32)
     x = modem.mod(bits)  # (B, n_sym, n_sc, n_tx)
 
     pm_tx = link_pilot_masks(cfg)  # (n_tx, n_sym, n_sc)

@@ -17,11 +17,13 @@ share one compiled pipeline across same-shape cells.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import numpy as np
 
 from repro.phy import ofdm
+from repro.phy.coding import CodeConfig, make_code
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +34,9 @@ class LinkScenario:
     snr_db: float
     doppler_rho: float = 1.0  # per-symbol tap correlation; 1.0 = static
     description: str = ""
+    # channel code; None = uncoded (raw-LLR terminal, BER-scored).  Coded
+    # scenarios append an LDPC decode stage and are BLER-scored.
+    code: Optional[CodeConfig] = None
 
     @property
     def modem(self) -> ofdm.Modem:
@@ -51,12 +56,25 @@ class LinkScenario:
     def data_bits_per_slot(self) -> int:
         """Payload bits per slot (data REs only — the BER denominator)."""
         g = self.grid
-        union = np.asarray(ofdm.link_pilot_masks(g)).any(axis=0)
+        union = ofdm.link_pilot_masks_np(g).any(axis=0)
         return int((union.size - union.sum()) * g.n_tx
                    * self.modem.bits_per_symbol)
 
+    @property
+    def coded(self) -> bool:
+        return self.code is not None
+
     def make_batch(self, key: jax.Array, batch: int) -> dict:
-        """Simulate a batch of uplink slots of this scenario."""
+        """Simulate a batch of uplink slots of this scenario.
+
+        Coded scenarios CRC-attach + LDPC-encode per-slot transport
+        blocks onto the data REs (and carry ``info_bits`` for BLER
+        scoring); uncoded scenarios draw i.i.d. payload bits.
+        """
+        if self.code is not None:
+            from repro.phy import coding
+
+            return coding.make_coded_slot(key, self, batch)
         return ofdm.make_link_slot(
             key, self.grid, self.modem, batch, self.snr_db,
             doppler_rho=self.doppler_rho,
@@ -139,6 +157,24 @@ for _s in [
     LinkScenario(
         "mimo4x8-qam64-snr24", _MIMO4X8, "qam64", 24.0,
         description="4x8 massive-MIMO uplink at peak spectral efficiency",
+    ),
+    # -- coded links (CRC + base-graph-lite LDPC, BLER-scored) -------------
+    LinkScenario(
+        "siso-qpsk-r12-snr8", _SISO, "qpsk", 8.0, code=make_code("r12"),
+        description="coverage-limited coded SISO control/voice, rate-1/2",
+    ),
+    LinkScenario(
+        "siso-qam16-r12-snr15", _SISO, "qam16", 15.0, code=make_code("r12"),
+        description="mid-cell coded SISO data, 16-QAM rate-1/2",
+    ),
+    LinkScenario(
+        "siso-qam16-r34-snr18", _SISO, "qam16", 18.0, code=make_code("r34"),
+        description="cell-center coded SISO data, 16-QAM rate-3/4",
+    ),
+    LinkScenario(
+        "mimo2x2-qam16-r12-snr17", _MIMO2X2, "qam16", 17.0,
+        code=make_code("r12"),
+        description="2x2 coded spatial multiplexing, 16-QAM rate-1/2",
     ),
 ]:
     register_scenario(_s)

@@ -139,6 +139,9 @@ class MeshServeReport:
     n_padded: int
     n_stolen: int
     cells: dict  # name -> PhyServeReport
+    # coded-link aggregates (None when no cell carries a channel code)
+    bler: Optional[float] = None
+    info_bits_per_sec: Optional[float] = None
 
     def summary(self) -> str:
         parts = [
@@ -150,6 +153,12 @@ class MeshServeReport:
         ]
         if self.ber is not None:
             parts.append(f"BER={self.ber:.4f}")
+        if self.bler is not None:
+            parts.append(f"BLER={self.bler:.4f}")
+        if self.info_bits_per_sec is not None:
+            parts.append(
+                f"goodput={self.info_bits_per_sec/1e6:.2f} Mbit/s"
+            )
         if self.che_mse is not None:
             parts.append(f"CHE-MSE={self.che_mse:.4f}")
         parts.append(
@@ -198,8 +207,10 @@ class CellMeshEngine:
 
         by_key: dict[tuple, list[int]] = {}
         for i, c in enumerate(self.cells):
+            # the code is part of the receive computation (decode stage
+            # structure), so coded cells only group with same-code cells
             key = (c.spec.receiver, c.scenario.grid, c.scenario.modulation,
-                   c.spec.options)
+                   c.scenario.code, c.spec.options)
             by_key.setdefault(key, []).append(i)
         self.groups: list[_Group] = []
         for key, idxs in by_key.items():
@@ -380,6 +391,17 @@ class CellMeshEngine:
         bers = [r.metrics["ber"] for r in c.served if "ber" in r.metrics]
         mses = [r.metrics["che_mse"] for r in c.served
                 if "che_mse" in r.metrics]
+        blers = [r.metrics["bler"] for r in c.served
+                 if "bler" in r.metrics]
+        iters = [r.metrics["decode_iters"] for r in c.served
+                 if "decode_iters" in r.metrics]
+        wall_safe = max(group.wall_s, 1e-9)
+        bler = float(np.mean(blers)) if blers else None
+        goodput = None
+        if bler is not None and c.scenario.code is not None:
+            from repro.phy import coding
+
+            goodput = coding.goodput_bits(c.scenario, bler, n) / wall_safe
         return PhyServeReport(
             pipeline=group.pipeline.name,
             scenario=c.scenario.name,
@@ -387,11 +409,14 @@ class CellMeshEngine:
             n_batches=c.n_lane_steps,
             batch_size=self.batch_size,
             wall_s=group.wall_s,
-            slots_per_sec=n / max(group.wall_s, 1e-9),
+            slots_per_sec=n / wall_safe,
             ber=float(np.mean(bers)) if bers else None,
             che_mse=float(np.mean(mses)) if mses else None,
             tti=group.pipeline.tti_report(batch=self.batch_size),
             stage_cycles=group.pipeline.stage_cycles(),
+            bler=bler,
+            info_bits_per_sec=goodput,
+            decode_iters=float(np.mean(iters)) if iters else None,
         )
 
     def _report(self) -> MeshServeReport:
@@ -421,6 +446,21 @@ class CellMeshEngine:
             if not total:
                 return None
             return float(sum(v * n for v, n in pairs) / total)
+
+        # aggregate goodput: delivered payload bits across all coded
+        # cells over the whole run's wall time
+        good_bits = 0.0
+        any_coded = False
+        for c in self.cells:
+            rep = cells[c.spec.name]
+            if rep.bler is None or c.scenario.code is None:
+                continue
+            from repro.phy import coding
+
+            any_coded = True
+            good_bits += coding.goodput_bits(
+                c.scenario, rep.bler, rep.n_slots
+            )
         return MeshServeReport(
             n_cells=len(self.cells),
             n_groups=len(self.groups),
@@ -438,4 +478,7 @@ class CellMeshEngine:
             n_padded=sum(g.n_padded for g in self.groups),
             n_stolen=sum(g.n_stolen for g in self.groups),
             cells=cells,
+            bler=slot_mean("bler"),
+            info_bits_per_sec=(good_bits / max(wall, 1e-9)
+                               if any_coded else None),
         )

@@ -25,8 +25,9 @@ import numpy as np
 from repro.phy import link as _link
 
 # slot keys with a leading per-user batch axis; everything else is
-# scenario-static side info shared by every user
-BATCHED_KEYS = ("y_time", "y", "x", "h", "bits")
+# scenario-static side info shared by every user ("info_bits" only exists
+# on coded scenarios' slots — stacking skips absent keys)
+BATCHED_KEYS = ("y_time", "y", "x", "h", "bits", "info_bits")
 
 
 @dataclasses.dataclass
@@ -51,6 +52,10 @@ class PhyServeReport:
     che_mse: Optional[float]
     tti: dict  # pipeline.tti_report(batch=batch_size); may be empty
     stage_cycles: dict  # per-stage BlockCycles; may be empty
+    # coded-link metrics (None on uncoded scenarios)
+    bler: Optional[float] = None
+    info_bits_per_sec: Optional[float] = None
+    decode_iters: Optional[float] = None
 
     def summary(self) -> str:
         parts = [
@@ -59,6 +64,14 @@ class PhyServeReport:
         ]
         if self.ber is not None:
             parts.append(f"BER={self.ber:.4f}")
+        if self.bler is not None:
+            parts.append(f"BLER={self.bler:.4f}")
+        if self.info_bits_per_sec is not None:
+            parts.append(
+                f"goodput={self.info_bits_per_sec/1e6:.2f} Mbit/s"
+            )
+        if self.decode_iters is not None:
+            parts.append(f"dec-iters={self.decode_iters:.1f}")
         if self.che_mse is not None:
             parts.append(f"CHE-MSE={self.che_mse:.4f}")
         # pipelines without cycle estimators report no TTI budget
@@ -125,7 +138,8 @@ class PhyServeEngine:
         slots = [r.slot for r in reqs] + [reqs[0].slot] * pad
         batch = dict(slots[0])
         for k in BATCHED_KEYS:
-            batch[k] = jnp.concatenate([s[k] for s in slots], axis=0)
+            if k in batch:
+                batch[k] = jnp.concatenate([s[k] for s in slots], axis=0)
         return batch
 
     def run(self, warmup: bool = True) -> PhyServeReport:
@@ -145,7 +159,7 @@ class PhyServeEngine:
             jax.block_until_ready(
                 self.pipeline.run(self._stack(chunks[0]))["llr"]
             )
-        bers, mses = [], []
+        bers, mses, blers, iters = [], [], [], []
         wall = 0.0
         for chunk in chunks:
             # timed window covers only the compiled receiver executable;
@@ -165,17 +179,32 @@ class PhyServeEngine:
                     bers.append(r.metrics["ber"])
                 if "che_mse" in r.metrics:
                     mses.append(r.metrics["che_mse"])
+                if "bler" in r.metrics:
+                    blers.append(r.metrics["bler"])
+                if "decode_iters" in r.metrics:
+                    iters.append(r.metrics["decode_iters"])
         n = len(reqs)
+        wall_safe = max(wall, 1e-9)
+        bler = float(np.mean(blers)) if blers else None
+        scn = self.pipeline.scenario
+        goodput = None
+        if bler is not None and scn.code is not None:
+            from repro.phy import coding
+
+            goodput = coding.goodput_bits(scn, bler, n) / wall_safe
         return PhyServeReport(
             pipeline=self.pipeline.name,
-            scenario=self.pipeline.scenario.name,
+            scenario=scn.name,
             n_slots=n,
             n_batches=len(chunks),
             batch_size=self.batch_size,
             wall_s=wall,
-            slots_per_sec=n / max(wall, 1e-9),
+            slots_per_sec=n / wall_safe,
             ber=float(np.mean(bers)) if bers else None,
             che_mse=float(np.mean(mses)) if mses else None,
             tti=self.pipeline.tti_report(batch=self.batch_size),
             stage_cycles=self.pipeline.stage_cycles(),
+            bler=bler,
+            info_bits_per_sec=goodput,
+            decode_iters=float(np.mean(iters)) if iters else None,
         )
