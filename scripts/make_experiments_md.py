@@ -6,7 +6,10 @@ Sources -> targets:
   experiments/phy/rx_kernels.json -> docs/EXPERIMENTS.md  (rx-kernels tables)
   experiments/phy/multicell.json  -> docs/EXPERIMENTS.md  (multicell tables)
   experiments/phy/coding.json     -> docs/EXPERIMENTS.md  (coding tables)
+  experiments/phy/harq.json       -> docs/EXPERIMENTS.md  (HARQ closed-loop
+                                     tables)
   repro.phy.scenarios registry    -> docs/SCENARIOS.md    (scenario table)
+  repro.phy.scenarios ladders     -> docs/SERVING.md      (MCS-ladder table)
   experiments/dryrun/*.json       -> EXPERIMENTS.md       (legacy LM tables,
                                      skipped when absent)
 
@@ -30,6 +33,7 @@ PHY_E2E = "experiments/phy/e2e.json"
 PHY_RX_KERNELS = "experiments/phy/rx_kernels.json"
 PHY_MULTICELL = "experiments/phy/multicell.json"
 PHY_CODING = "experiments/phy/coding.json"
+PHY_HARQ = "experiments/phy/harq.json"
 
 
 def load_dryrun(d):
@@ -271,6 +275,50 @@ def coding_serve_table(data):
     return "\n".join(rows)
 
 
+# -- HARQ closed-loop tables (docs/EXPERIMENTS.md) --------------------------
+
+def harq_sweep_table(data):
+    """SNR × max-retx closed-loop sweep: single-shot vs IR-combined BLER."""
+    rows = [
+        "| scenario | rate | SNR dB | max retx | 1st-tx BLER | residual BLER | HARQ rounds | miss rate | goodput kbit/s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for w in data["harq"]:
+        for i, p in enumerate(w["points"]):
+            name = f"`{w['scenario']}`" if i == 0 else ""
+            rate = f"{w['rate']:g}" if i == 0 else ""
+            rows.append(
+                f"| {name} | {rate} | {p['snr_db']:g} | {p['max_retx']} | "
+                f"{_opt(p['first_tx_bler'])} | {_opt(p['residual_bler'])} | "
+                f"{_opt(p['mean_harq_rounds'], '{:.2f}')} | "
+                f"{p['deadline_miss_rate']:.4f} | "
+                f"{p['goodput_kbits_per_sec']} |"
+            )
+    return "\n".join(rows)
+
+
+def harq_adapt_table(data):
+    """Closed-loop OLLA adaptation vs every fixed MCS rung."""
+    rows = [
+        "| ladder | SNR dB | mode | residual BLER | HARQ rounds | goodput kbit/TTI | MCS occupancy |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for a in data["adapt"]:
+        for i, r in enumerate(a["rows"]):
+            name = f"`{a['ladder']}`" if i == 0 else ""
+            snr = f"{a['snr_db']:g}" if i == 0 else ""
+            occ = " ".join(
+                f"{k}:{v:g}" for k, v in sorted(r["mcs_occupancy"].items())
+            ) or "-"
+            rows.append(
+                f"| {name} | {snr} | {r['mode']} | "
+                f"{_opt(r['residual_bler'])} | "
+                f"{_opt(r['mean_harq_rounds'], '{:.2f}')} | "
+                f"{r['goodput_kbits_per_tti']} | {occ} |"
+            )
+    return "\n".join(rows)
+
+
 # -- scenario catalogue (docs/SCENARIOS.md) ---------------------------------
 
 def scenario_table():
@@ -291,6 +339,27 @@ def scenario_table():
             f"{g.n_symbols}×{g.n_subcarriers} | {dmrs} | {s.snr_db:g} | "
             f"{s.doppler_rho:g} | {s.description} |"
         )
+    return "\n".join(rows)
+
+
+# -- MCS ladders (docs/SERVING.md) ------------------------------------------
+
+def mcs_ladder_table():
+    from repro.phy.scenarios import get_ladder, get_scenario, ladder_names
+
+    rows = [
+        "| ladder | rung | scenario | modulation | code rate | payload bits/slot | operating SNR dB |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for name in ladder_names():
+        lad = get_ladder(name)
+        for i, rung in enumerate(lad.rungs):
+            s = get_scenario(rung)
+            rows.append(
+                f"| {f'`{name}`' if i == 0 else ''} | {i} | `{rung}` | "
+                f"{s.modulation} | {s.code.rate:g} | {lad.efficiency(i)} | "
+                f"{s.snr_db:g} |"
+            )
     return "\n".join(rows)
 
 
@@ -348,9 +417,20 @@ def targets():
                 ("coding-decoder-table", coding_decoder_table(cd)),
                 ("coding-serve-table", coding_serve_table(cd)),
             ]
+        if os.path.exists(PHY_HARQ):
+            with open(PHY_HARQ) as f:
+                hq = json.load(f)
+            sections += [
+                ("harq-sweep-table", harq_sweep_table(hq)),
+                ("harq-adapt-table", harq_adapt_table(hq)),
+            ]
         if sections:
             out.append(("docs/EXPERIMENTS.md",
                         regenerate("docs/EXPERIMENTS.md", sections)))
+    if os.path.exists("docs/SERVING.md"):
+        out.append(("docs/SERVING.md",
+                    regenerate("docs/SERVING.md",
+                               [("mcs-ladder-table", mcs_ladder_table())])))
     if os.path.exists("docs/SCENARIOS.md"):
         out.append(("docs/SCENARIOS.md",
                     regenerate("docs/SCENARIOS.md",

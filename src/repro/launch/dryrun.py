@@ -82,7 +82,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         for k, v in batch_specs.items()
     }
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     ctx = shd.activation_mesh(mesh, mode=mode)
     ctx.__enter__()
     if shape.kind == "train":
@@ -134,10 +134,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         raise ValueError(shape.kind)
     ctx.__exit__(None, None, None)
 
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     try:

@@ -41,9 +41,9 @@ def main():
         )
         for _ in range(args.requests)
     ]
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = engine.generate(reqs)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     tok = sum(len(r.out_tokens) for r in out)
     print(f"{args.arch}: {len(reqs)} requests, {tok} tokens, "
           f"{dt:.2f}s ({tok/dt:.1f} tok/s)")

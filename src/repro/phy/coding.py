@@ -12,9 +12,15 @@ transmit/receive coding chain around the detector pipeline:
   small base graph ``(m_b x n_b)`` lifted by circulant size ``z``, with a
   dual-diagonal parity part so encoding is one sparse XOR-accumulate
   (``cumsum mod 2`` over block rows) instead of a dense generator.
-* **Rate matching** — systematic bits plus the leading parity blocks of
-  the mother code are transmitted; ``derate_match`` re-inserts zero LLRs
-  for the punctured tail (the decoder runs on the full mother graph).
+* **Rate matching** — the mother codeword sits in a circular buffer and
+  each transmission reads ``e_bits`` starting at a redundancy-version
+  (RV) offset: RV0 is the systematic bits plus the leading parity blocks,
+  higher RVs start deeper into the parity (incremental redundancy);
+  ``derate_match`` scatters the received LLRs back to their mother-code
+  positions (zero LLRs on untransmitted bits) and **accumulates** an
+  optional prior buffer, so HARQ retransmissions combine soft information
+  across rounds (chase combining when the windows overlap, IR where the
+  RVs bring fresh parity).
 * **Coded slot generation** — :func:`make_coded_slot` encodes per-slot
   transport blocks and maps the codeword bits onto the OFDM grid's data
   REs in a fixed canonical order, so :func:`coded_llrs` (used by the
@@ -241,18 +247,64 @@ def encode(code: CodeConfig, bits: jax.Array) -> jax.Array:
     return cw.reshape(bits.shape[:-1] + (code.n_mother,))
 
 
-def rate_match(code: CodeConfig, cw: jax.Array) -> jax.Array:
-    """codeword (..., n_mother) -> transmitted bits (..., e_bits):
+N_RV = 4  # redundancy versions cycling the circular buffer (5G-style)
+
+
+def rv_offset(code: CodeConfig, rv):
+    """Start offset (in mother-code bits) of redundancy version ``rv``.
+
+    The mother codeword is a circular buffer; RV ``r`` transmits the
+    ``e_bits`` window starting at block column ``r * n_b / 4`` (rounded
+    down to a whole lifted block so circulant structure is preserved).
+    Accepts a python int or an int array (per-codeword RVs).
+    """
+    return ((rv % N_RV) * code.n_b) // N_RV * code.z
+
+
+def rate_match(code: CodeConfig, cw: jax.Array, rv: int = 0) -> jax.Array:
+    """codeword (..., n_mother) -> transmitted bits (..., e_bits): the
+    circular-buffer window starting at :func:`rv_offset`.  RV0 is the
     systematic part + leading parity blocks (tail punctured)."""
-    return cw[..., : code.e_bits]
+    off = int(rv_offset(code, rv))
+    if off == 0:
+        return cw[..., : code.e_bits]
+    return jnp.roll(cw, -off, axis=-1)[..., : code.e_bits]
 
 
-def derate_match(code: CodeConfig, llr_e: jax.Array) -> jax.Array:
-    """Received LLRs (..., e_bits) -> mother-code LLRs (..., n_mother);
-    punctured positions carry zero LLRs (erasures)."""
+def derate_match(code: CodeConfig, llr_e: jax.Array, rv=None,
+                 prior: Optional[jax.Array] = None) -> jax.Array:
+    """Received LLRs (..., e_bits) -> mother-code LLRs (..., n_mother).
+
+    Scatters the transmitted window back to its circular-buffer positions
+    (untransmitted bits carry zero LLRs — erasures), then **adds**
+    ``prior`` — the combined channel LLRs of earlier HARQ rounds — so
+    soft information accumulates across retransmissions.  ``rv`` may be a
+    python int (static window) or an int array of leading batch shape
+    (per-codeword RVs inside one compiled batch; the window becomes one
+    gather).
+    """
     pad = code.n_mother - code.e_bits
-    zeros = jnp.zeros(llr_e.shape[:-1] + (pad,), llr_e.dtype)
-    return jnp.concatenate([llr_e.astype(jnp.float32), zeros], axis=-1)
+    buf = llr_e.astype(jnp.float32)
+    if pad:
+        zeros = jnp.zeros(llr_e.shape[:-1] + (pad,), jnp.float32)
+        buf = jnp.concatenate([buf, zeros], axis=-1)
+    if rv is not None and not (isinstance(rv, int) and rv % N_RV == 0):
+        off = jnp.asarray(rv_offset(code, rv), jnp.int32)
+        if off.ndim == 0:
+            buf = jnp.roll(buf, off, axis=-1)
+        else:
+            # off has leading batch shape; mother bit i of codeword b was
+            # received at window position (i - off[b]) mod n (zero pad
+            # covers the untransmitted tail)
+            n = code.n_mother
+            off = off.reshape(off.shape + (1,) * (buf.ndim - off.ndim))
+            idx = jnp.mod(jnp.arange(n, dtype=jnp.int32) - off, n)
+            buf = jnp.take_along_axis(
+                buf, jnp.broadcast_to(idx, buf.shape), axis=-1
+            )
+    if prior is not None:
+        buf = buf + prior.astype(jnp.float32)
+    return buf
 
 
 # ---------------------------------------------------------------------------
@@ -287,7 +339,9 @@ def goodput_bits(scenario, bler: float, n_slots: int) -> float:
     return (1.0 - bler) * info_bits_per_slot(scenario) * n_slots
 
 
-def make_coded_slot(key: jax.Array, scenario, batch: int) -> dict:
+def make_coded_slot(key: jax.Array, scenario, batch: int,
+                    rv: Optional[int] = None,
+                    info: Optional[jax.Array] = None) -> dict:
     """Simulate one coded uplink slot batch of ``scenario``.
 
     Draws per-slot transport blocks, CRC-attaches, LDPC-encodes and
@@ -295,6 +349,13 @@ def make_coded_slot(key: jax.Array, scenario, batch: int) -> dict:
     canonical order (trailing REs carry random filler), then runs the
     usual channel/noise simulation.  Adds ``info_bits`` (B, C, k_info)
     to the slot dict for BLER scoring.
+
+    HARQ hooks: ``info`` re-transmits fixed transport blocks (a
+    retransmission of the same codewords over a fresh channel/noise
+    realization) and ``rv`` picks the redundancy-version window of the
+    circular buffer; a non-None ``rv`` also stamps an ``rv`` array (B,)
+    into the slot so the decode stage de-rate-matches per slot inside
+    one compiled batch.
     """
     code, g = scenario.code, scenario.grid
     nb = scenario.modem.bits_per_symbol
@@ -304,10 +365,15 @@ def make_coded_slot(key: jax.Array, scenario, batch: int) -> dict:
         f"{scenario.data_bits_per_slot} data bits"
     )
     kb_, kf, kc = jax.random.split(key, 3)
-    info = jax.random.bernoulli(
-        kb_, 0.5, (batch, c, code.k_info)
-    ).astype(jnp.int32)
-    tx = rate_match(code, encode(code, crc_attach(info, code.crc_bits)))
+    if info is None:
+        info = jax.random.bernoulli(
+            kb_, 0.5, (batch, c, code.k_info)
+        ).astype(jnp.int32)
+    else:
+        info = jnp.asarray(info, jnp.int32)
+        assert info.shape == (batch, c, code.k_info), info.shape
+    tx = rate_match(code, encode(code, crc_attach(info, code.crc_bits)),
+                    rv=rv or 0)
     flat = tx.reshape(batch, c * code.e_bits)
     n_fill = scenario.data_bits_per_slot - c * code.e_bits
     if n_fill:
@@ -327,6 +393,8 @@ def make_coded_slot(key: jax.Array, scenario, batch: int) -> dict:
         doppler_rho=scenario.doppler_rho, bits=bits,
     )
     slot["info_bits"] = info
+    if rv is not None:
+        slot["rv"] = jnp.full((batch,), int(rv), jnp.int32)
     return slot
 
 
@@ -347,17 +415,23 @@ def coded_llrs(scenario, llr: jax.Array) -> jax.Array:
 
 def decode_blocks(scenario, llr: jax.Array, *, max_iters: int = 12,
                   alpha: float = 0.8, use_pallas: Optional[bool] = None,
-                  interpret: Optional[bool] = None) -> dict:
+                  interpret: Optional[bool] = None, rv=None,
+                  prior_llr: Optional[jax.Array] = None) -> dict:
     """Full receive-side coding chain on a finished detector state's LLRs.
 
-    Returns ``info_bits_hat`` (B, C, k_info), ``crc_ok`` (B, C) and
-    ``decode_iters`` (B, C) — the decode stage in
-    :mod:`repro.phy.link` merges these into the pipeline state.
+    Returns ``info_bits_hat`` (B, C, k_info), ``crc_ok`` (B, C),
+    ``decode_iters`` (B, C) and ``cw_llr`` (B, C, n_mother) — the decode
+    stage in :mod:`repro.phy.link` merges these into the pipeline state.
+    ``cw_llr`` is the *combined channel* LLR buffer (this transmission's
+    de-rate-matched window plus ``prior_llr``): exactly what a HARQ
+    entity must store to soft-combine the next retransmission, so the
+    closed-loop runtime reads it straight off the state.
     """
     from repro.kernels import ldpc
 
     code = scenario.code
-    cw_llr = derate_match(code, coded_llrs(scenario, llr))  # (B, C, n)
+    cw_llr = derate_match(code, coded_llrs(scenario, llr), rv=rv,
+                          prior=prior_llr)  # (B, C, n)
     b, c, n = cw_llr.shape
     post, iters = ldpc.ldpc_decode(
         cw_llr.reshape(b * c, n), code, max_iters=max_iters, alpha=alpha,
@@ -369,4 +443,5 @@ def decode_blocks(scenario, llr: jax.Array, *, max_iters: int = 12,
         "info_bits_hat": hard[:, : code.k_info].reshape(b, c, code.k_info),
         "crc_ok": ok.reshape(b, c),
         "decode_iters": iters.reshape(b, c),
+        "cw_llr": cw_llr,
     }

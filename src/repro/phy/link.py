@@ -393,7 +393,16 @@ def decode_stage(scenario: LinkScenario, *, max_iters: int = 12,
     matches (zero LLRs on the punctured tail) and runs the batched layered
     min-sum decoder (:mod:`repro.kernels.ldpc` — Pallas on TPU, jnp
     elsewhere), then CRC-checks the systematic part.  Adds
-    ``info_bits_hat`` / ``crc_ok`` / ``decode_iters`` to the state.
+    ``info_bits_hat`` / ``crc_ok`` / ``decode_iters`` / ``cw_llr`` to the
+    state.
+
+    HARQ state rides in the slot: when the closed-loop runtime
+    (:mod:`repro.serve.runtime`) stamps an ``rv`` array (B,) and a
+    ``prior_llr`` buffer (B, C, n_mother) into the slot, de-rate-matching
+    reads each slot's redundancy-version window and accumulates the prior
+    soft bits before decoding — chase + incremental-redundancy combining
+    inside the same compiled batch.  Slots without those keys decode
+    exactly as before (RV0, no prior).
 
     Cycle model: the min-sum sweeps are PE (VPU) work — per iteration each
     edge costs ~8 ops over the z lanes, and the syndrome check ~2 — while
@@ -410,7 +419,8 @@ def decode_stage(scenario: LinkScenario, *, max_iters: int = 12,
     def apply(state):
         state.update(
             coding.decode_blocks(
-                scenario, state["llr"], max_iters=max_iters, alpha=alpha
+                scenario, state["llr"], max_iters=max_iters, alpha=alpha,
+                rv=state.get("rv"), prior_llr=state.get("prior_llr"),
             )
         )
         return state

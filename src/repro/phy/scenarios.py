@@ -13,6 +13,14 @@ by scripts/make_experiments_md.py).  Note that only (grid, modulation)
 shape the receive computation — SNR/Doppler affect slot *generation* and
 ride along inside the slot — which is what lets the multi-cell engine
 share one compiled pipeline across same-shape cells.
+
+Coded scenarios that share a grid additionally group into **MCS ladders**
+(:class:`MCSLadder`): ordered rungs of rising spectral efficiency the
+closed-loop runtime's link adaptation walks from ACK/NACK feedback.  All
+rungs take the same receive-side *inputs* (``y_time``/``y``/``h`` shapes
+are grid-only), so the adapter switches a user between prebuilt per-rung
+pipelines without any recompilation — each rung's executable is compiled
+once up front and reused for every user parked on it.
 """
 from __future__ import annotations
 
@@ -93,6 +101,71 @@ class LinkScenario:
 
     def replace(self, **kw) -> "LinkScenario":
         return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class MCSLadder:
+    """An ordered family of same-grid coded scenarios (MCS rungs).
+
+    ``rungs`` are registered scenario names sorted by rising spectral
+    efficiency (payload bits per slot).  Every rung must carry a channel
+    code (link adaptation needs per-block CRC ACK/NACK) and share one
+    grid, so a user's uplink samples feed any rung's pipeline unchanged —
+    switching MCS never changes the receive-side input shapes.
+    """
+    name: str
+    rungs: tuple
+
+    def __post_init__(self):
+        assert self.rungs, f"ladder {self.name!r} has no rungs"
+        scns = self.scenarios()
+        grids = {s.grid for s in scns}
+        assert len(grids) == 1, (
+            f"ladder {self.name!r} mixes grids: "
+            f"{[s.name for s in scns]}"
+        )
+        uncoded = [s.name for s in scns if s.code is None]
+        assert not uncoded, (
+            f"ladder {self.name!r} has uncoded rungs {uncoded} — "
+            "link adaptation needs CRC ACK/NACK feedback"
+        )
+        eff = [self.efficiency(i) for i in range(len(scns))]
+        assert eff == sorted(eff), (
+            f"ladder {self.name!r} rungs not in rising spectral-"
+            f"efficiency order: {dict(zip(self.rungs, eff))}"
+        )
+
+    def scenarios(self) -> list[LinkScenario]:
+        return [get_scenario(n) for n in self.rungs]
+
+    def efficiency(self, idx: int) -> int:
+        """Payload (post-CRC) bits per slot of rung ``idx``."""
+        from repro.phy import coding
+
+        return coding.info_bits_per_slot(get_scenario(self.rungs[idx]))
+
+    def __len__(self) -> int:
+        return len(self.rungs)
+
+
+_LADDERS: dict[str, MCSLadder] = {}
+
+
+def register_ladder(ladder: MCSLadder, overwrite: bool = False) -> MCSLadder:
+    if ladder.name in _LADDERS and not overwrite:
+        raise ValueError(f"ladder {ladder.name!r} already registered")
+    _LADDERS[ladder.name] = ladder
+    return ladder
+
+
+def get_ladder(name: str) -> MCSLadder:
+    if name not in _LADDERS:
+        raise KeyError(f"unknown ladder {name!r}; have {sorted(_LADDERS)}")
+    return _LADDERS[name]
+
+
+def ladder_names() -> list[str]:
+    return sorted(_LADDERS)
 
 
 _REGISTRY: dict[str, LinkScenario] = {}
@@ -176,5 +249,26 @@ for _s in [
         code=make_code("r12"),
         description="2x2 coded spatial multiplexing, 16-QAM rate-1/2",
     ),
+    LinkScenario(
+        "mimo2x2-qam16-r34-snr20", _MIMO2X2, "qam16", 20.0,
+        code=make_code("r34"),
+        description="2x2 coded spatial multiplexing, 16-QAM rate-3/4",
+    ),
 ]:
     register_scenario(_s)
+
+
+# MCS ladders: same grid, rising spectral efficiency — the closed-loop
+# runtime's OLLA link adaptation walks users along these rungs
+for _l in [
+    MCSLadder("siso-coded", (
+        "siso-qpsk-r12-snr8",
+        "siso-qam16-r12-snr15",
+        "siso-qam16-r34-snr18",
+    )),
+    MCSLadder("mimo2x2-coded", (
+        "mimo2x2-qam16-r12-snr17",
+        "mimo2x2-qam16-r34-snr20",
+    )),
+]:
+    register_ladder(_l)

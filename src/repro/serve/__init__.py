@@ -1,8 +1,15 @@
 """Serving engines: LM request batching (:class:`ServeEngine`), single-cell
-PHY slot serving (:class:`PhyServeEngine`), and multi-cell sharded PHY
-serving over a (cell, batch) device mesh (:class:`CellMeshEngine`)."""
+PHY slot serving (:class:`PhyServeEngine`), multi-cell sharded PHY serving
+over a (cell, batch) device mesh (:class:`CellMeshEngine`), and the
+closed-loop TTI runtime with HARQ + link adaptation
+(:class:`SlotScheduler`).  The PHY paths share one slot-scheduler core
+(:mod:`repro.serve.runtime`)."""
 from repro.serve.engine import ServeEngine, Request
-from repro.serve.phy_engine import PhyServeEngine, PhyServeReport, SlotRequest
+from repro.serve.runtime import (
+    BatchRunner, ClosedLoopReport, PhyServeReport, SlotLedger, SlotRequest,
+    SlotScheduler, build_serve_report, slot_metric_means, stack_slots,
+)
+from repro.serve.phy_engine import PhyServeEngine
 from repro.serve.cell_mesh import (
     CellMeshEngine, CellSpec, MeshServeReport, cell,
 )

@@ -3,7 +3,10 @@
 The paper places TensorPool inside a densified base-station fleet: one
 compute cluster multiplexes *many* cells' uplink traffic (AI-RAN style).
 This module scales :class:`repro.serve.phy_engine.PhyServeEngine` past one
-cell: a :class:`CellMeshEngine` instantiates N cells — each a registered
+cell (both are thin frontends over the shared slot-scheduler core in
+:mod:`repro.serve.runtime`: submit bookkeeping, slot stacking, metric
+aggregation, and report construction all come from there): a
+:class:`CellMeshEngine` instantiates N cells — each a registered
 scenario + receiver pipeline — and drains their slot queues through
 jit-sharded batched steps on a ``(cell, batch)`` device mesh
 (:func:`repro.launch.mesh.make_cell_mesh`), using the logical-axis rules in
@@ -44,11 +47,10 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_cell_mesh
 from repro.phy import link as _link
 from repro.phy.scenarios import LinkScenario, get_scenario
-from repro.serve.phy_engine import (
-    BATCHED_KEYS, PhyServeReport, SlotRequest,
+from repro.serve.runtime import (
+    BATCHED_KEYS, PhyServeReport, SlotLedger, SlotRequest, TTI_S,
+    build_serve_report, make_traffic, stack_slots,
 )
-
-TTI_S = 1e-3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,7 +228,7 @@ class CellMeshEngine:
                 if self.groups else 1
             mesh = make_cell_mesh(lanes)
         self.mesh = mesh
-        self._next_uid = 0
+        self._ledger = SlotLedger()
 
     # -- traffic ----------------------------------------------------------
     def _cell(self, name: str) -> _Cell:
@@ -239,10 +241,7 @@ class CellMeshEngine:
 
     def submit(self, cell_name: str, slot: dict,
                user_id: Optional[int] = None) -> SlotRequest:
-        if user_id is None:
-            user_id = self._next_uid
-        self._next_uid = max(self._next_uid, user_id) + 1
-        req = SlotRequest(user_id=user_id, slot=slot)
+        req = self._ledger.new_request(slot, user_id)
         self._cell(cell_name).queue.append(req)
         return req
 
@@ -261,8 +260,8 @@ class CellMeshEngine:
         for kc, (name, n) in zip(keys, sorted(n_slots.items())):
             scn = self._cell(name).scenario
             out[name] = [
-                self.submit(name, scn.make_batch(k, 1))
-                for k in (jax.random.split(kc, n) if n else [])
+                self.submit(name, slot)
+                for slot in (make_traffic(scn, kc, n) if n else [])
             ]
         return out
 
@@ -321,20 +320,16 @@ class CellMeshEngine:
     # -- staging (host side; overlapped with device compute) --------------
     def _stage(self, lanes: list[_Lane]) -> dict:
         """Stack one step's slots to (n_lanes, batch, ...) sharded arrays."""
-        sample = lanes[0].reqs[0].slot
-        stacked = {}
-        for k in sample:
-            per_lane = []
-            for lane in lanes:
-                slots = [r.slot for r in lane.reqs]
-                slots = slots + [slots[0]] * lane.pad
-                if k in BATCHED_KEYS:
-                    per_lane.append(np.concatenate(
-                        [np.asarray(s[k]) for s in slots], axis=0
-                    ))
-                else:  # side info is per-cell, take it from the lane head
-                    per_lane.append(np.asarray(slots[0][k]))
-            stacked[k] = np.stack(per_lane, axis=0)
+        per_lane = [
+            stack_slots([r.slot for r in lane.reqs], lane.pad, xp=np)
+            for lane in lanes
+        ]
+        stacked = {
+            # batched keys gain the lane axis; per-cell side info (left
+            # unstacked by stack_slots, from the lane head) just stacks
+            k: np.stack([np.asarray(pl[k]) for pl in per_lane], axis=0)
+            for k in per_lane[0]
+        }
         shardings = shd.cell_slot_shardings(
             stacked, self.mesh, batched_keys=BATCHED_KEYS
         )
@@ -387,36 +382,13 @@ class CellMeshEngine:
 
     # -- reporting --------------------------------------------------------
     def _cell_report(self, group: _Group, c: _Cell) -> PhyServeReport:
-        n = len(c.served)
-        bers = [r.metrics["ber"] for r in c.served if "ber" in r.metrics]
-        mses = [r.metrics["che_mse"] for r in c.served
-                if "che_mse" in r.metrics]
-        blers = [r.metrics["bler"] for r in c.served
-                 if "bler" in r.metrics]
-        iters = [r.metrics["decode_iters"] for r in c.served
-                 if "decode_iters" in r.metrics]
-        wall_safe = max(group.wall_s, 1e-9)
-        bler = float(np.mean(blers)) if blers else None
-        goodput = None
-        if bler is not None and c.scenario.code is not None:
-            from repro.phy import coding
-
-            goodput = coding.goodput_bits(c.scenario, bler, n) / wall_safe
-        return PhyServeReport(
-            pipeline=group.pipeline.name,
-            scenario=c.scenario.name,
-            n_slots=n,
-            n_batches=c.n_lane_steps,
-            batch_size=self.batch_size,
-            wall_s=group.wall_s,
-            slots_per_sec=n / wall_safe,
-            ber=float(np.mean(bers)) if bers else None,
-            che_mse=float(np.mean(mses)) if mses else None,
-            tti=group.pipeline.tti_report(batch=self.batch_size),
-            stage_cycles=group.pipeline.stage_cycles(),
-            bler=bler,
-            info_bits_per_sec=goodput,
-            decode_iters=float(np.mean(iters)) if iters else None,
+        # the shared aggregation/report core (runtime.build_serve_report)
+        # keeps per-cell numbers directly comparable to a single-cell run;
+        # wall time is the whole group's (cells share its compiled steps)
+        return build_serve_report(
+            group.pipeline, c.scenario, [r.metrics for r in c.served],
+            n_slots=len(c.served), n_batches=c.n_lane_steps,
+            batch_size=self.batch_size, wall_s=group.wall_s,
         )
 
     def _report(self) -> MeshServeReport:

@@ -1,86 +1,34 @@
-"""Batched PHY slot-serving engine.
+"""Batched PHY slot-serving engine (open-loop, single cell).
 
-Shares the slot-batching idiom of :mod:`repro.serve.engine`: a queue of
-per-user uplink slots is drained through one receiver pipeline in
-fixed-size batches, so a single compiled end-to-end executable serves the
-whole cell's traffic.  The report carries throughput (slots/sec), link
-quality (BER / channel MSE), and the TensorPool TTI-budget utilization
-from the pipeline's cycle model.
+A thin frontend over the shared slot-scheduler core in
+:mod:`repro.serve.runtime`: submit bookkeeping rides on
+:class:`~repro.serve.runtime.SlotLedger`, batching/padding and the timed
+execution loop on :class:`~repro.serve.runtime.BatchRunner`, and the
+report on :func:`~repro.serve.runtime.build_serve_report` — the same
+pieces the multi-cell mesh engine and the closed-loop
+:class:`~repro.serve.runtime.SlotScheduler` use, so all serving paths
+batch, time, and score slots identically.
 
-This is the single-cell building block; :mod:`repro.serve.cell_mesh`
-scales the same idiom to N cells sharded over a (cell, batch) device
-mesh, and its per-cell reports reuse :class:`PhyServeReport` so the two
-are directly comparable.
+This engine drains a pre-filled queue once (open loop, no feedback); for
+TTI-clocked closed-loop serving with HARQ and link adaptation see
+:class:`repro.serve.runtime.SlotScheduler`.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.phy import link as _link
-
-# slot keys with a leading per-user batch axis; everything else is
-# scenario-static side info shared by every user ("info_bits" only exists
-# on coded scenarios' slots — stacking skips absent keys)
-BATCHED_KEYS = ("y_time", "y", "x", "h", "bits", "info_bits")
-
-
-@dataclasses.dataclass
-class SlotRequest:
-    """One user's uplink slot awaiting processing."""
-    user_id: int
-    slot: dict  # link-slot dict with batch dim 1 on BATCHED_KEYS
-    metrics: Optional[dict] = None
-    done: bool = False
-
-
-@dataclasses.dataclass
-class PhyServeReport:
-    pipeline: str
-    scenario: str
-    n_slots: int
-    n_batches: int
-    batch_size: int
-    wall_s: float
-    slots_per_sec: float
-    ber: Optional[float]
-    che_mse: Optional[float]
-    tti: dict  # pipeline.tti_report(batch=batch_size); may be empty
-    stage_cycles: dict  # per-stage BlockCycles; may be empty
-    # coded-link metrics (None on uncoded scenarios)
-    bler: Optional[float] = None
-    info_bits_per_sec: Optional[float] = None
-    decode_iters: Optional[float] = None
-
-    def summary(self) -> str:
-        parts = [
-            f"{self.pipeline}: {self.n_slots} slots in {self.wall_s:.3f}s "
-            f"({self.slots_per_sec:.1f} slots/s, batch={self.batch_size})"
-        ]
-        if self.ber is not None:
-            parts.append(f"BER={self.ber:.4f}")
-        if self.bler is not None:
-            parts.append(f"BLER={self.bler:.4f}")
-        if self.info_bits_per_sec is not None:
-            parts.append(
-                f"goodput={self.info_bits_per_sec/1e6:.2f} Mbit/s"
-            )
-        if self.decode_iters is not None:
-            parts.append(f"dec-iters={self.decode_iters:.1f}")
-        if self.che_mse is not None:
-            parts.append(f"CHE-MSE={self.che_mse:.4f}")
-        # pipelines without cycle estimators report no TTI budget
-        util = self.tti.get("tti_utilization") if self.tti else None
-        if util is not None:
-            parts.append(
-                f"TTI util={util:.3f} (fits={self.tti.get('fits_tti')})"
-            )
-        return "  ".join(parts)
+from repro.serve.runtime import (  # noqa: F401  (re-exported API)
+    BATCHED_KEYS,
+    BatchRunner,
+    PhyServeReport,
+    SlotLedger,
+    SlotRequest,
+    build_serve_report,
+    make_traffic,
+)
 
 
 class PhyServeEngine:
@@ -94,7 +42,7 @@ class PhyServeEngine:
         self.pipeline = pipeline
         self.batch_size = batch_size
         self._queue: list[SlotRequest] = []
-        self._next_uid = 0
+        self._ledger = SlotLedger()
 
     @classmethod
     def from_scenario(cls, scenario, receiver: str = "classical",
@@ -117,31 +65,19 @@ class PhyServeEngine:
     # -- traffic ----------------------------------------------------------
     def submit(self, slot: dict, user_id: Optional[int] = None
                ) -> SlotRequest:
-        if user_id is None:
-            user_id = self._next_uid
-        self._next_uid = max(self._next_uid, user_id) + 1
-        req = SlotRequest(user_id=user_id, slot=slot)
+        req = self._ledger.new_request(slot, user_id)
         self._queue.append(req)
         return req
 
     def submit_traffic(self, key: jax.Array, n_users: int
                        ) -> list[SlotRequest]:
         """Simulate ``n_users`` independent single-slot arrivals."""
-        reqs = []
-        for k in jax.random.split(key, n_users):
-            reqs.append(self.submit(self.pipeline.scenario.make_batch(k, 1)))
-        return reqs
+        return [
+            self.submit(slot)
+            for slot in make_traffic(self.pipeline.scenario, key, n_users)
+        ]
 
     # -- serving ----------------------------------------------------------
-    def _stack(self, reqs: list[SlotRequest]) -> dict:
-        pad = self.batch_size - len(reqs)
-        slots = [r.slot for r in reqs] + [reqs[0].slot] * pad
-        batch = dict(slots[0])
-        for k in BATCHED_KEYS:
-            if k in batch:
-                batch[k] = jnp.concatenate([s[k] for s in slots], axis=0)
-        return batch
-
     def run(self, warmup: bool = True) -> PhyServeReport:
         """Serve every queued slot; returns the throughput/quality report.
 
@@ -151,60 +87,11 @@ class PhyServeEngine:
         """
         reqs = self._queue
         self._queue = []
-        chunks = [
-            reqs[i : i + self.batch_size]
-            for i in range(0, len(reqs), self.batch_size)
-        ]
-        if warmup and chunks:
-            jax.block_until_ready(
-                self.pipeline.run(self._stack(chunks[0]))["llr"]
-            )
-        bers, mses, blers, iters = [], [], [], []
-        wall = 0.0
-        for chunk in chunks:
-            # timed window covers only the compiled receiver executable;
-            # metric extraction happens outside it
-            batch = self._stack(chunk)
-            t0 = time.perf_counter()
-            state = jax.block_until_ready(self.pipeline.run(batch))
-            wall += time.perf_counter() - t0
-            metrics = _link.slot_metrics(
-                state, self.pipeline.scenario, per_slot=True
-            )
-            metrics = {k: np.asarray(v) for k, v in metrics.items()}
-            for j, r in enumerate(chunk):
-                r.metrics = {k: float(v[j]) for k, v in metrics.items()}
-                r.done = True
-                if "ber" in r.metrics:
-                    bers.append(r.metrics["ber"])
-                if "che_mse" in r.metrics:
-                    mses.append(r.metrics["che_mse"])
-                if "bler" in r.metrics:
-                    blers.append(r.metrics["bler"])
-                if "decode_iters" in r.metrics:
-                    iters.append(r.metrics["decode_iters"])
-        n = len(reqs)
-        wall_safe = max(wall, 1e-9)
-        bler = float(np.mean(blers)) if blers else None
-        scn = self.pipeline.scenario
-        goodput = None
-        if bler is not None and scn.code is not None:
-            from repro.phy import coding
-
-            goodput = coding.goodput_bits(scn, bler, n) / wall_safe
-        return PhyServeReport(
-            pipeline=self.pipeline.name,
-            scenario=scn.name,
-            n_slots=n,
-            n_batches=len(chunks),
-            batch_size=self.batch_size,
-            wall_s=wall,
-            slots_per_sec=n / wall_safe,
-            ber=float(np.mean(bers)) if bers else None,
-            che_mse=float(np.mean(mses)) if mses else None,
-            tti=self.pipeline.tti_report(batch=self.batch_size),
-            stage_cycles=self.pipeline.stage_cycles(),
-            bler=bler,
-            info_bits_per_sec=goodput,
-            decode_iters=float(np.mean(iters)) if iters else None,
+        runner = BatchRunner(self.pipeline, self.batch_size)
+        n_batches = runner.drain(reqs, warmup=warmup)
+        return build_serve_report(
+            self.pipeline, self.pipeline.scenario,
+            [r.metrics for r in reqs],
+            n_slots=len(reqs), n_batches=n_batches,
+            batch_size=self.batch_size, wall_s=runner.wall_s,
         )

@@ -1,0 +1,705 @@
+"""Closed-loop TTI serving runtime + the shared slot-scheduler core.
+
+Real base stations are closed-loop: every transport block is ACK/NACKed,
+failed blocks come back as HARQ retransmissions whose soft bits combine
+with the buffered LLRs of earlier rounds, and the MCS adapts to the
+observed BLER.  This module is the serving layer's shared core plus that
+closed loop:
+
+* **Shared core** — :class:`SlotRequest` / :class:`PhyServeReport`,
+  submit bookkeeping (:class:`SlotLedger`), batch stacking/padding
+  (:func:`stack_slots`), traffic generation (:func:`make_traffic`),
+  slot-metric aggregation (:func:`slot_metric_means`) and report
+  construction (:func:`build_serve_report`), and the timed batch
+  executor (:class:`BatchRunner`).  The open-loop frontends
+  (:class:`repro.serve.phy_engine.PhyServeEngine`,
+  :class:`repro.serve.cell_mesh.CellMeshEngine`) are thin layers over
+  these pieces, so single-cell, multi-cell, and closed-loop serving all
+  batch, time, and score slots identically.
+
+* **Closed loop** — :class:`SlotScheduler` advances in TTI ticks: a
+  Poisson arrival process fills per-user queues, each tick serves at
+  most one slot per user (grouped by (MCS, SNR) into fixed-size batches:
+  the MCS picks the rung's single compiled executable, and the SNR must
+  be batch-uniform because ``noise_var`` is scalar side info — the same
+  constraint as a mesh lane), CRC feedback
+  ACK/NACKs each transport block, NACKed blocks requeue as HARQ
+  retransmissions at the next redundancy version with the combined
+  channel LLRs of earlier rounds riding along as the decode prior
+  (chase + incremental redundancy, :mod:`repro.phy.coding`), and
+  OLLA-style link adaptation walks each user along an
+  :class:`repro.phy.scenarios.MCSLadder`.
+
+HARQ buffer lifecycle (the serving-level analogue of the paper's L1
+data-reuse argument): a process's combined-LLR buffer is *created* on the
+first NACK, *accumulated into* by every retransmission's de-rate-matched
+window, and *freed* on delivery or max-retx exhaustion — soft state lives
+exactly as long as the block is in flight, like TensorPool keeps decoder
+state L1-resident across min-sum iterations instead of round-tripping it.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.phy import link as _link
+
+# slot keys with a leading per-user batch axis; everything else is
+# scenario-static side info shared by every user.  "info_bits" only
+# exists on coded slots; "rv" / "prior_llr" only on HARQ-aware slots
+# from the closed-loop scheduler — stacking skips absent keys.
+BATCHED_KEYS = ("y_time", "y", "x", "h", "bits", "info_bits", "rv",
+                "prior_llr")
+
+# the slot-mean metrics every serving report aggregates (BER / CHE-MSE on
+# all links, BLER / decode effort on coded links)
+METRIC_KEYS = ("ber", "che_mse", "bler", "decode_iters")
+
+TTI_S = 1e-3  # the paper's slot deadline
+
+
+@dataclasses.dataclass
+class SlotRequest:
+    """One user's uplink slot awaiting processing."""
+    user_id: int
+    slot: dict  # link-slot dict with batch dim 1 on BATCHED_KEYS
+    metrics: Optional[dict] = None
+    done: bool = False
+
+
+@dataclasses.dataclass
+class PhyServeReport:
+    pipeline: str
+    scenario: str
+    n_slots: int
+    n_batches: int
+    batch_size: int
+    wall_s: float
+    slots_per_sec: float
+    ber: Optional[float]
+    che_mse: Optional[float]
+    tti: dict  # pipeline.tti_report(batch=batch_size); may be empty
+    stage_cycles: dict  # per-stage BlockCycles; may be empty
+    # coded-link metrics (None on uncoded scenarios)
+    bler: Optional[float] = None
+    info_bits_per_sec: Optional[float] = None
+    decode_iters: Optional[float] = None
+
+    def summary(self) -> str:
+        parts = [
+            f"{self.pipeline}: {self.n_slots} slots in {self.wall_s:.3f}s "
+            f"({self.slots_per_sec:.1f} slots/s, batch={self.batch_size})"
+        ]
+        if self.ber is not None:
+            parts.append(f"BER={self.ber:.4f}")
+        if self.bler is not None:
+            parts.append(f"BLER={self.bler:.4f}")
+        if self.info_bits_per_sec is not None:
+            parts.append(
+                f"goodput={self.info_bits_per_sec/1e6:.2f} Mbit/s"
+            )
+        if self.decode_iters is not None:
+            parts.append(f"dec-iters={self.decode_iters:.1f}")
+        if self.che_mse is not None:
+            parts.append(f"CHE-MSE={self.che_mse:.4f}")
+        # pipelines without cycle estimators report no TTI budget
+        util = self.tti.get("tti_utilization") if self.tti else None
+        if util is not None:
+            parts.append(
+                f"TTI util={util:.3f} (fits={self.tti.get('fits_tti')})"
+            )
+        return "  ".join(parts)
+
+
+class SlotLedger:
+    """Monotone user-id allocation + request construction — the submit
+    bookkeeping previously duplicated by both serve engines."""
+
+    def __init__(self):
+        self._next_uid = 0
+
+    def new_request(self, slot: dict,
+                    user_id: Optional[int] = None) -> SlotRequest:
+        if user_id is None:
+            user_id = self._next_uid
+        self._next_uid = max(self._next_uid, user_id) + 1
+        return SlotRequest(user_id=user_id, slot=slot)
+
+
+def stack_slots(slots: list, pad: int = 0, keys=BATCHED_KEYS, xp=jnp
+                ) -> dict:
+    """Stack per-user slots (batch dim 1 each) into one batched slot.
+
+    ``pad`` repeats ``slots[0]`` to reach a static batch size; non-batched
+    side info is taken from the first slot (it is scenario-static).
+    ``xp`` picks the array backend: jnp for direct device dispatch, np for
+    host-side staging (the mesh engine stacks lanes before transfer).
+    """
+    slots = list(slots) + [slots[0]] * pad
+    batch = dict(slots[0])
+    for k in keys:
+        if k in batch:
+            batch[k] = xp.concatenate(
+                [xp.asarray(s[k]) for s in slots], axis=0
+            )
+    return batch
+
+
+def make_traffic(scenario, key: jax.Array, n: int) -> list:
+    """Simulate ``n`` independent single-slot arrivals of ``scenario``."""
+    return [scenario.make_batch(k, 1) for k in jax.random.split(key, n)]
+
+
+def slot_metric_means(metric_dicts) -> dict:
+    """Slot-weighted means of the standard per-slot metrics.
+
+    One aggregation for every serving report (single-cell engine, mesh
+    per-cell reports, closed-loop scheduler): each metric averages over
+    the slots that carry it, absent metrics aggregate to None.
+    """
+    out = {}
+    vals = {k: [] for k in METRIC_KEYS}
+    for m in metric_dicts:
+        if not m:
+            continue
+        for k in METRIC_KEYS:
+            if k in m:
+                vals[k].append(m[k])
+    for k, v in vals.items():
+        out[k] = float(np.mean(v)) if v else None
+    return out
+
+
+def build_serve_report(pipeline: _link.ReceiverPipeline, scenario,
+                       metric_dicts, *, n_slots: int, n_batches: int,
+                       batch_size: int, wall_s: float) -> PhyServeReport:
+    """Aggregate served-slot metrics into a :class:`PhyServeReport` —
+    shared by the single-cell engine and the mesh's per-cell reports so
+    the two always agree (incl. the goodput definition)."""
+    means = slot_metric_means(metric_dicts)
+    wall_safe = max(wall_s, 1e-9)
+    goodput = None
+    if means["bler"] is not None and scenario.code is not None:
+        from repro.phy import coding
+
+        goodput = coding.goodput_bits(
+            scenario, means["bler"], n_slots
+        ) / wall_safe
+    return PhyServeReport(
+        pipeline=pipeline.name,
+        scenario=scenario.name,
+        n_slots=n_slots,
+        n_batches=n_batches,
+        batch_size=batch_size,
+        wall_s=wall_s,
+        slots_per_sec=n_slots / wall_safe,
+        ber=means["ber"],
+        che_mse=means["che_mse"],
+        tti=pipeline.tti_report(batch=batch_size),
+        stage_cycles=pipeline.stage_cycles(),
+        bler=means["bler"],
+        info_bits_per_sec=goodput,
+        decode_iters=means["decode_iters"],
+    )
+
+
+class BatchRunner:
+    """One pipeline + timed fixed-shape batch execution.
+
+    The execution core under every serving path: stacks up to
+    ``batch_size`` requests (padding by repetition so the pipeline
+    compiles exactly once per slot structure), runs the jitted chain with
+    the timed window covering only the compiled executable, and records
+    per-request metrics.  ``warmup()`` runs one batch untimed so reported
+    throughput measures the steady state, not tracing+compilation.
+    """
+
+    def __init__(self, pipeline: _link.ReceiverPipeline, batch_size: int):
+        self.pipeline = pipeline
+        self.batch_size = batch_size
+        self.wall_s = 0.0
+        self.n_batches = 0
+
+    def warmup(self, reqs: list) -> None:
+        batch = stack_slots(
+            [r.slot for r in reqs], self.batch_size - len(reqs)
+        )
+        jax.block_until_ready(self.pipeline.run(batch))
+
+    def run_batch(self, reqs: list) -> dict:
+        """Serve one chunk of requests; returns the raw pipeline state.
+
+        Marks each request done with its per-slot metrics; padded tail
+        results are discarded.
+        """
+        batch = stack_slots(
+            [r.slot for r in reqs], self.batch_size - len(reqs)
+        )
+        t0 = time.perf_counter()
+        state = jax.block_until_ready(self.pipeline.run(batch))
+        self.wall_s += time.perf_counter() - t0
+        self.n_batches += 1
+        metrics = _link.slot_metrics(
+            state, self.pipeline.scenario, per_slot=True
+        )
+        metrics = {k: np.asarray(v) for k, v in metrics.items()}
+        for j, r in enumerate(reqs):
+            r.metrics = {k: float(v[j]) for k, v in metrics.items()}
+            r.done = True
+        return state
+
+    def drain(self, reqs: list, warmup: bool = True) -> int:
+        """Serve ``reqs`` in fixed-size chunks; returns the chunk count."""
+        chunks = [
+            reqs[i : i + self.batch_size]
+            for i in range(0, len(reqs), self.batch_size)
+        ]
+        if warmup and chunks:
+            self.warmup(chunks[0])
+        for chunk in chunks:
+            self.run_batch(chunk)
+        return len(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop TTI scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HarqProcess:
+    """Soft state of one in-flight slot's transport blocks.
+
+    ``prior`` is the combined channel-LLR buffer (C, n_mother) —
+    allocated on the first NACK, accumulated by every retransmission,
+    freed on delivery or exhaustion.  ``acked`` marks blocks that already
+    passed CRC in an earlier round (they ride along in retransmitted
+    slots but their feedback is final).
+    """
+    mcs: int
+    info: np.ndarray  # (1, C, k_info) transport-block payloads
+    prior: np.ndarray  # (1, C, n_mother) combined channel LLRs
+    acked: np.ndarray  # (C,) bool
+    n_tx: int = 0  # transmissions completed so far
+    rv: int = 0  # redundancy version of the *next* transmission
+
+
+@dataclasses.dataclass
+class _Job:
+    """One pending transmission in a user's queue."""
+    enq_tick: int  # when this attempt became schedulable
+    harq: Optional[HarqProcess] = None  # None until first serve
+
+
+@dataclasses.dataclass
+class UserState:
+    """Per-user closed-loop state: queue, channel, and link adaptation."""
+    user_id: int
+    snr_db: float
+    mcs: int
+    olla: float = 0.0  # OLLA accumulator; +-1 triggers an MCS walk
+    backlog: collections.deque = dataclasses.field(
+        default_factory=collections.deque
+    )
+
+
+@dataclasses.dataclass
+class TickStats:
+    """What one TTI tick did (the per-tick log of the closed loop)."""
+    tick: int
+    n_arrivals: int = 0
+    n_served: int = 0
+    n_miss: int = 0  # served slots whose queue latency beat the deadline
+    backlog_after: int = 0
+
+
+@dataclasses.dataclass
+class ClosedLoopReport:
+    """Aggregate report of one closed-loop serving run."""
+    ladder: str
+    receiver: str
+    n_users: int
+    n_ticks: int
+    batch_size: int
+    max_retx: int
+    deadline_ttis: int
+    adapt: bool
+    n_slots: int
+    n_batches: int
+    wall_s: float
+    slots_per_sec: float
+    n_arrivals: int
+    deadline_miss_rate: float
+    first_tx_bler: Optional[float]
+    residual_bler: Optional[float]
+    mean_harq_rounds: Optional[float]
+    blocks_delivered: int
+    blocks_lost: int
+    goodput_bits_per_sec: float
+    # delivered payload bits per TTI tick: the channel-time goodput —
+    # wall-clock-free, so runs with different per-rung pipeline costs
+    # (e.g. adaptive vs fixed MCS) compare apples-to-apples
+    goodput_bits_per_tti: float
+    mcs_occupancy: dict  # rung scenario name -> fraction of served slots
+    backlog_left: int
+    harq_open: int  # HARQ buffers still allocated at the end of the run
+
+    def summary(self) -> str:
+        parts = [
+            f"closed-loop[{self.ladder}]: {self.n_slots} slots / "
+            f"{self.n_ticks} TTIs in {self.wall_s:.3f}s "
+            f"({self.slots_per_sec:.1f} slots/s, batch={self.batch_size})",
+            f"miss={self.deadline_miss_rate:.3f}",
+        ]
+        if self.first_tx_bler is not None:
+            parts.append(f"1tx-BLER={self.first_tx_bler:.4f}")
+        if self.residual_bler is not None:
+            parts.append(f"resid-BLER={self.residual_bler:.4f}")
+        if self.mean_harq_rounds is not None:
+            parts.append(f"rounds={self.mean_harq_rounds:.2f}")
+        parts.append(f"goodput={self.goodput_bits_per_sec/1e6:.2f} Mbit/s")
+        occ = " ".join(
+            f"{name}:{frac:.2f}"
+            for name, frac in sorted(self.mcs_occupancy.items())
+        )
+        parts.append(f"occ[{occ}]")
+        return "  ".join(parts)
+
+
+class SlotScheduler:
+    """TTI-clocked closed-loop slot scheduler over an MCS ladder.
+
+    Parameters
+    ----------
+    ladder: an :class:`~repro.phy.scenarios.MCSLadder`, a registered
+        ladder name, or a single coded :class:`LinkScenario` (fixed MCS,
+        a one-rung ladder).
+    n_users: users in the cell; each keeps its own queue, HARQ state,
+        and link-adaptation state.
+    batch_size: slots per compiled pipeline invocation (per rung).
+    receiver / options: forwarded to the pipeline builder once per rung.
+    pipelines: prebuilt per-rung pipelines (skips building; lets sweeps
+        reuse compiled executables across scheduler instances).
+    arrival_rate: Poisson mean of new slot arrivals per user per TTI.
+    max_retx: HARQ retransmissions after the first transmission before a
+        block is declared lost and its buffer freed.
+    deadline_ttis: queue-latency budget; a served slot that waited more
+        ticks than this counts as a TTI-deadline miss.
+    max_batches_per_tick: pool capacity — compiled batches the cell can
+        run inside one TTI (None = serve every active user each tick).
+    adapt / target_bler / olla_step: OLLA link adaptation.  On ACK the
+        accumulator rises by ``olla_step``, on NACK it falls by
+        ``olla_step * (1 - target_bler) / target_bler`` (zero drift at
+        the target), and crossing +-1 walks the user one rung up/down.
+    snr_db: the users' channel SNR (defaults to the lowest rung's
+        operating point); snr_spread_db spreads users uniformly around it.
+    """
+
+    def __init__(self, ladder, *, n_users: int = 4, batch_size: int = 4,
+                 receiver: str = "classical", options: Optional[dict] = None,
+                 pipelines: Optional[list] = None,
+                 arrival_rate: float = 1.0, max_retx: int = 2,
+                 deadline_ttis: int = 4,
+                 max_batches_per_tick: Optional[int] = None,
+                 adapt: bool = True, target_bler: float = 0.1,
+                 olla_step: float = 0.1, init_mcs: int = 0,
+                 snr_db: Optional[float] = None,
+                 snr_spread_db: float = 0.0, seed: int = 0):
+        from repro.phy.scenarios import LinkScenario, MCSLadder, get_ladder
+
+        if isinstance(ladder, str):
+            ladder = get_ladder(ladder)
+        if isinstance(ladder, LinkScenario):
+            assert ladder.code is not None, (
+                f"{ladder.name}: the closed loop needs a channel code "
+                "(CRC ACK/NACK feedback)"
+            )
+            self.rungs = [ladder]
+            self.ladder_name = ladder.name
+        else:
+            assert isinstance(ladder, MCSLadder), ladder
+            self.rungs = ladder.scenarios()
+            self.ladder_name = ladder.name
+        self.receiver = receiver
+        self.batch_size = batch_size
+        self.max_retx = max_retx
+        self.deadline_ttis = deadline_ttis
+        self.max_batches_per_tick = max_batches_per_tick
+        self.arrival_rate = arrival_rate
+        self.adapt = adapt and len(self.rungs) > 1
+        self.target_bler = target_bler
+        self.olla_up = olla_step
+        self.olla_down = olla_step * (1.0 - target_bler) / target_bler
+
+        if pipelines is None:
+            pipelines = [
+                _link.build_pipeline(receiver, s, **(options or {}))
+                for s in self.rungs
+            ]
+        assert len(pipelines) == len(self.rungs)
+        self.runners = [BatchRunner(p, batch_size) for p in pipelines]
+        self._warmed = [False] * len(self.runners)
+
+        init_mcs = min(init_mcs, len(self.rungs) - 1)
+        base_snr = self.rungs[init_mcs].snr_db if snr_db is None else snr_db
+        self._rng = np.random.default_rng(seed)
+        self._key = jax.random.PRNGKey(seed)
+        self.users = [
+            UserState(
+                user_id=i,
+                snr_db=float(base_snr + self._rng.uniform(
+                    -snr_spread_db, snr_spread_db
+                )),
+                mcs=init_mcs,
+            )
+            for i in range(n_users)
+        ]
+        self.ledger = SlotLedger()
+        self.now = 0
+        self.tick_log: list[TickStats] = []
+        # aggregate counters
+        self._arrivals = 0
+        self._served = 0
+        self._missed = 0
+        self._first_tx_blocks = 0
+        self._first_tx_errors = 0
+        self._delivered = [0] * len(self.rungs)  # blocks per rung
+        self._lost = 0
+        self._rounds: list[int] = []  # per finalized process
+        self._occupancy = [0] * len(self.rungs)  # served slots per rung
+
+    # -- traffic ----------------------------------------------------------
+    def _next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def inject_backlog(self, n_per_user: int) -> None:
+        """Enqueue ``n_per_user`` new-data jobs for every user at the
+        current tick (deterministic traffic for tests/benchmarks)."""
+        for u in self.users:
+            for _ in range(n_per_user):
+                u.backlog.append(_Job(enq_tick=self.now))
+                self._arrivals += 1
+
+    def _arrive(self, stats: TickStats) -> None:
+        if self.arrival_rate <= 0:
+            return
+        for u in self.users:
+            for _ in range(int(self._rng.poisson(self.arrival_rate))):
+                u.backlog.append(_Job(enq_tick=self.now))
+                stats.n_arrivals += 1
+                self._arrivals += 1
+
+    # -- slot construction ------------------------------------------------
+    def _make_slot(self, user: UserState, job: _Job, mcs: int) -> dict:
+        """Build the (re)transmission slot for one job.
+
+        New data draws fresh transport blocks at the planned MCS (the
+        batch's rung) and allocates the HARQ process; retransmissions
+        re-encode the pinned process's blocks at its next RV over a
+        fresh channel realization, with the combined-LLR buffer riding
+        as the prior.
+        """
+        from repro.phy import coding
+
+        if job.harq is None:
+            scn = self.rungs[mcs]
+            n_cw = coding.codewords_per_slot(scn)
+            slot = coding.make_coded_slot(
+                self._next_key(), scn.replace(snr_db=user.snr_db), 1, rv=0
+            )
+            job.harq = HarqProcess(
+                mcs=mcs,
+                info=np.asarray(slot["info_bits"]),
+                prior=np.zeros(
+                    (1, n_cw, scn.code.n_mother), np.float32
+                ),
+                acked=np.zeros(n_cw, bool),
+            )
+        else:
+            h = job.harq
+            scn = self.rungs[h.mcs]  # retx pins the MCS of the first tx
+            slot = coding.make_coded_slot(
+                self._next_key(), scn.replace(snr_db=user.snr_db), 1,
+                rv=h.rv, info=h.info,
+            )
+        slot["prior_llr"] = job.harq.prior
+        return slot
+
+    # -- feedback ---------------------------------------------------------
+    def _feedback(self, user: UserState, job: _Job, crc_ok: np.ndarray,
+                  cw_llr: np.ndarray) -> None:
+        """ACK/NACK one served slot: finalize, requeue, or exhaust."""
+        h = job.harq
+        h.n_tx += 1
+        first_tx = h.n_tx == 1
+        ok = h.acked | crc_ok
+        if first_tx:
+            self._first_tx_blocks += crc_ok.size
+            self._first_tx_errors += int((~crc_ok).sum())
+            if self.adapt:
+                self._olla(user, bool(crc_ok.all()))
+        if ok.all():
+            self._delivered[h.mcs] += int(ok.size)
+            self._rounds.append(h.n_tx)
+            job.harq = None  # buffer freed
+        elif h.n_tx > self.max_retx:
+            self._delivered[h.mcs] += int(ok.sum())
+            self._lost += int((~ok).sum())
+            self._rounds.append(h.n_tx)
+            job.harq = None  # block lost, buffer freed
+        else:
+            h.acked = ok
+            h.prior = np.asarray(cw_llr, np.float32)
+            h.rv += 1
+            # retransmissions queue ahead of the user's new data
+            user.backlog.appendleft(
+                dataclasses.replace(job, enq_tick=self.now)
+            )
+
+    def _olla(self, user: UserState, ack: bool) -> None:
+        """Outer-loop link adaptation: asymmetric ACK/NACK steps with
+        zero drift at the target first-transmission BLER; crossing +-1
+        walks the MCS one rung and resets the accumulator."""
+        user.olla += self.olla_up if ack else -self.olla_down
+        if user.olla >= 1.0:
+            if user.mcs < len(self.rungs) - 1:
+                user.mcs += 1
+            user.olla = 0.0
+        elif user.olla <= -1.0:
+            if user.mcs > 0:
+                user.mcs -= 1
+            user.olla = 0.0
+
+    # -- the TTI loop -----------------------------------------------------
+    def _plan_batches(self) -> list:
+        """Pick this tick's transmissions and form its compiled batches.
+
+        One slot per user per TTI (its oldest job).  Batches group by
+        (MCS, channel SNR): MCS picks the rung's compiled executable, and
+        the SNR must be batch-uniform because ``noise_var`` is scalar
+        side info shared by a whole batch (same constraint as a mesh
+        lane) — mixing SNRs would mis-scale every non-head user's LLRs.
+        Batches are capped at ``max_batches_per_tick`` (compiled-batch
+        units — the pool's per-TTI capacity), oldest job first; jobs that
+        don't fit go back to their user's queue head and wait.
+        """
+        active = [u for u in self.users if u.backlog]
+        active.sort(key=lambda u: u.backlog[0].enq_tick)
+        by_key: dict[tuple, list] = {}
+        for u in active:
+            job = u.backlog.popleft()
+            mcs = job.harq.mcs if job.harq is not None else u.mcs
+            by_key.setdefault((mcs, u.snr_db), []).append((u, job))
+        batches = []
+        for (mcs, _snr), pairs in by_key.items():
+            for i in range(0, len(pairs), self.batch_size):
+                batches.append((mcs, pairs[i : i + self.batch_size]))
+        batches.sort(key=lambda b: min(j.enq_tick for _, j in b[1]))
+        cap = self.max_batches_per_tick
+        if cap is not None and len(batches) > cap:
+            for _mcs, pairs in batches[cap:]:
+                for u, job in pairs:  # one job per user -> head restore
+                    u.backlog.appendleft(job)
+            batches = batches[:cap]
+        return batches
+
+    def tick(self) -> TickStats:
+        """Advance one TTI: arrivals, batched serving, HARQ feedback."""
+        stats = TickStats(tick=self.now)
+        self._arrive(stats)
+
+        for mcs, pairs in self._plan_batches():
+            runner = self.runners[mcs]
+            reqs = [
+                self.ledger.new_request(
+                    self._make_slot(u, job, mcs), user_id=u.user_id
+                )
+                for u, job in pairs
+            ]
+            if not self._warmed[mcs]:
+                runner.warmup(reqs)
+                self._warmed[mcs] = True
+            state = runner.run_batch(reqs)
+            crc_ok = np.asarray(state["crc_ok"])
+            cw_llr = np.asarray(state["cw_llr"])
+            for j, (u, job) in enumerate(pairs):
+                self._occupancy[mcs] += 1
+                self._served += 1
+                stats.n_served += 1
+                if self.now - job.enq_tick > self.deadline_ttis:
+                    self._missed += 1
+                    stats.n_miss += 1
+                self._feedback(
+                    u, job, crc_ok[j].astype(bool), cw_llr[j : j + 1]
+                )
+
+        stats.backlog_after = sum(len(u.backlog) for u in self.users)
+        self.tick_log.append(stats)
+        self.now += 1
+        return stats
+
+    def run(self, n_ticks: int) -> ClosedLoopReport:
+        for _ in range(n_ticks):
+            self.tick()
+        return self.report()
+
+    # -- reporting --------------------------------------------------------
+    @property
+    def harq_open(self) -> int:
+        """HARQ soft buffers currently allocated (in-flight processes)."""
+        return sum(
+            1 for u in self.users for j in u.backlog if j.harq is not None
+        )
+
+    def report(self) -> ClosedLoopReport:
+        wall = sum(r.wall_s for r in self.runners)
+        wall_safe = max(wall, 1e-9)
+        finalized = self._lost + sum(self._delivered)
+        good_bits = sum(
+            d * s.code.k_info for d, s in zip(self._delivered, self.rungs)
+        )
+        total_occ = max(sum(self._occupancy), 1)
+        return ClosedLoopReport(
+            ladder=self.ladder_name,
+            receiver=self.receiver,
+            n_users=len(self.users),
+            n_ticks=self.now,
+            batch_size=self.batch_size,
+            max_retx=self.max_retx,
+            deadline_ttis=self.deadline_ttis,
+            adapt=self.adapt,
+            n_slots=self._served,
+            n_batches=sum(r.n_batches for r in self.runners),
+            wall_s=wall,
+            slots_per_sec=self._served / wall_safe,
+            n_arrivals=self._arrivals,
+            deadline_miss_rate=(
+                self._missed / self._served if self._served else 0.0
+            ),
+            first_tx_bler=(
+                self._first_tx_errors / self._first_tx_blocks
+                if self._first_tx_blocks else None
+            ),
+            residual_bler=(
+                self._lost / finalized if finalized else None
+            ),
+            mean_harq_rounds=(
+                float(np.mean(self._rounds)) if self._rounds else None
+            ),
+            blocks_delivered=int(sum(self._delivered)),
+            blocks_lost=self._lost,
+            goodput_bits_per_sec=good_bits / wall_safe,
+            goodput_bits_per_tti=good_bits / max(self.now, 1),
+            mcs_occupancy={
+                s.name: self._occupancy[i] / total_occ
+                for i, s in enumerate(self.rungs)
+            },
+            backlog_left=sum(len(u.backlog) for u in self.users),
+            harq_open=self.harq_open,
+        )

@@ -1,0 +1,244 @@
+"""Closed-loop TTI runtime: SlotScheduler edge cases, HARQ lifecycle,
+OLLA link adaptation, and the shared slot-scheduler core helpers."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.phy import build_pipeline, ofdm
+from repro.phy.scenarios import (
+    MCSLadder,
+    get_ladder,
+    get_scenario,
+    ladder_names,
+    register_ladder,
+    register_scenario,
+)
+from repro.serve import (
+    PhyServeEngine,
+    SlotScheduler,
+    slot_metric_means,
+    stack_slots,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+_SMOKE = dict(n_subcarriers=64, fft_size=64, n_taps=4, delay_spread=1.0)
+
+
+def _small(name: str, new: str, **kw):
+    """Small-grid clone of a registered coded scenario (idempotent)."""
+    try:
+        return get_scenario(new)
+    except KeyError:
+        pass
+    s = get_scenario(name).replace(name=new, **kw)
+    s = s.replace(grid=dataclasses.replace(s.grid, **_SMOKE))
+    return register_scenario(s)
+
+
+def _ladder():
+    _small("siso-qpsk-r12-snr8", "rt-qpsk-r12")
+    _small("siso-qam16-r12-snr15", "rt-qam16-r12")
+    try:
+        return get_ladder("rt-siso")
+    except KeyError:
+        return register_ladder(
+            MCSLadder("rt-siso", ("rt-qpsk-r12", "rt-qam16-r12"))
+        )
+
+
+# -- shared core ------------------------------------------------------------
+
+def test_slot_metric_means_skips_absent_metrics():
+    means = slot_metric_means([
+        {"ber": 0.1, "bler": 0.5},
+        {"ber": 0.3},
+        None,
+    ])
+    assert means["ber"] == pytest.approx(0.2)
+    assert means["bler"] == pytest.approx(0.5)
+    assert means["che_mse"] is None and means["decode_iters"] is None
+
+
+def test_stack_slots_pads_and_keeps_side_info():
+    scn = _small("siso-qpsk-r12-snr8", "rt-qpsk-r12")
+    slots = [scn.make_batch(k, 1) for k in jax.random.split(KEY, 2)]
+    batch = stack_slots(slots, pad=2)
+    assert batch["y"].shape[0] == 4
+    # padded tail repeats the first slot
+    np.testing.assert_array_equal(
+        np.asarray(batch["info_bits"][2]), np.asarray(slots[0]["info_bits"][0])
+    )
+    assert batch["noise_var"] == slots[0]["noise_var"]  # unstacked side info
+
+
+def test_ladder_registry_validates():
+    assert "siso-coded" in ladder_names()
+    lad = get_ladder("siso-coded")
+    effs = [lad.efficiency(i) for i in range(len(lad))]
+    assert effs == sorted(effs)
+    with pytest.raises(AssertionError):  # uncoded rung rejected
+        MCSLadder("bad", ("siso-qpsk-snr5",))
+    with pytest.raises(AssertionError):  # mixed grids rejected
+        MCSLadder("bad2", ("siso-qpsk-r12-snr8", "mimo2x2-qam16-r12-snr17"))
+
+
+# -- scheduler edge cases ---------------------------------------------------
+
+def test_empty_queue_ticks_are_noops():
+    scn = _small("siso-qpsk-r12-snr8", "rt-qpsk-r12")
+    sch = SlotScheduler(scn, n_users=2, arrival_rate=0.0)
+    rep = sch.run(3)
+    assert rep.n_ticks == 3 and rep.n_slots == 0
+    assert rep.deadline_miss_rate == 0.0
+    assert rep.first_tx_bler is None and rep.residual_bler is None
+    assert rep.harq_open == 0 and rep.backlog_left == 0
+    assert len(sch.tick_log) == 3
+    assert all(t.n_served == 0 for t in sch.tick_log)
+
+
+def test_harq_exhaustion_frees_buffers_and_counts_losses():
+    # an impossible link: every block NACKs until max-retx, then is lost
+    scn = _small("siso-qpsk-r12-snr8", "rt-qpsk-dead", snr_db=-25.0)
+    sch = SlotScheduler(scn, n_users=2, arrival_rate=0.0, max_retx=1,
+                        seed=3)
+    sch.inject_backlog(1)
+    rep = sch.run(4)  # 1 first tx + 1 retx per process, then drained
+    assert rep.backlog_left == 0
+    assert rep.harq_open == 0  # exhausted buffers were freed
+    assert rep.blocks_lost > 0 and rep.blocks_delivered == 0
+    assert rep.residual_bler == 1.0
+    assert rep.mean_harq_rounds == pytest.approx(2.0)  # 1 + max_retx
+    assert rep.n_slots == 4  # 2 users x (first tx + 1 retx)
+
+
+def test_harq_combining_recovers_blocks_below_first_tx_bler():
+    # marginal SNR: first transmissions fail often, IR-combined retx
+    # recover them — residual BLER strictly below first-tx BLER
+    scn = _small("siso-qpsk-r12-snr8", "rt-qpsk-r12")
+    sch = SlotScheduler(scn.replace(snr_db=scn.snr_db - 3.0), n_users=4,
+                        arrival_rate=0.8, max_retx=2, seed=1)
+    rep = sch.run(10)
+    assert rep.first_tx_bler is not None and rep.first_tx_bler > 0.0
+    assert rep.residual_bler is not None
+    assert rep.residual_bler < rep.first_tx_bler
+    assert rep.mean_harq_rounds > 1.0
+
+
+def test_all_users_miss_deadline_tick():
+    scn = _small("siso-qpsk-r12-snr8", "rt-qpsk-r12")
+    sch = SlotScheduler(scn, n_users=3, arrival_rate=0.0,
+                        deadline_ttis=0, max_batches_per_tick=1,
+                        batch_size=4)
+    sch.inject_backlog(2)  # 6 jobs, capacity 4/tick, deadline = same tick
+    sch.run(3)
+    late = sch.tick_log[1]
+    assert late.n_served > 0
+    assert late.n_miss == late.n_served  # every slot served late missed
+    rep = sch.report()
+    assert rep.deadline_miss_rate > 0.0
+
+
+def test_single_user_cell():
+    scn = _small("siso-qpsk-r12-snr8", "rt-qpsk-r12")
+    sch = SlotScheduler(scn, n_users=1, arrival_rate=0.0, seed=5)
+    sch.inject_backlog(3)
+    rep = sch.run(5)
+    assert rep.n_users == 1
+    assert rep.n_slots >= 3
+    assert rep.backlog_left == 0
+    assert sum(rep.mcs_occupancy.values()) == pytest.approx(1.0)
+    assert "closed-loop" in rep.summary()
+
+
+def test_olla_walks_users_up_at_high_snr():
+    lad = _ladder()
+    sch = SlotScheduler(lad, n_users=2, arrival_rate=1.0, snr_db=30.0,
+                        olla_step=0.5, seed=2)
+    rep = sch.run(8)
+    assert all(u.mcs == len(lad) - 1 for u in sch.users)
+    assert rep.mcs_occupancy["rt-qam16-r12"] > 0.0
+    assert rep.adapt
+
+
+def test_olla_walks_users_down_at_low_snr():
+    lad = _ladder()
+    sch = SlotScheduler(lad, n_users=2, arrival_rate=1.0, snr_db=-25.0,
+                        init_mcs=1, olla_step=0.5, max_retx=0, seed=2)
+    sch.run(6)
+    assert all(u.mcs == 0 for u in sch.users)
+
+
+def test_retransmission_pins_mcs_of_first_transmission():
+    """A NACKed block retransmits with the codeword's original MCS even
+    after the user's link adaptation moved on."""
+    lad = _ladder()
+    sch = SlotScheduler(lad, n_users=1, arrival_rate=0.0, snr_db=-25.0,
+                        init_mcs=1, olla_step=1.0, max_retx=3, seed=0)
+    sch.inject_backlog(1)
+    sch.tick()  # first tx at rung 1 NACKs -> user walks down to rung 0
+    assert sch.users[0].mcs == 0
+    job = sch.users[0].backlog[0]
+    assert job.harq is not None and job.harq.mcs == 1
+    sch.tick()  # the retx must still run on rung 1's pipeline
+    assert sch.report().mcs_occupancy["rt-qam16-r12"] == 1.0
+
+
+def test_mixed_snr_users_never_share_a_batch():
+    """noise_var is scalar side info shared by a whole batch, so users
+    at different channel SNRs must land in different batches even on the
+    same MCS rung (the same constraint as a mesh lane)."""
+    scn = _small("siso-qpsk-r12-snr8", "rt-qpsk-r12")
+    sch = SlotScheduler(scn, n_users=2, arrival_rate=0.0, batch_size=4,
+                        snr_db=20.0, seed=0)
+    sch.users[1].snr_db = 8.0  # distinct channels, one rung
+    sch.inject_backlog(1)
+    batches = sch._plan_batches()
+    assert len(batches) == 2
+    assert all(len(pairs) == 1 for _, pairs in batches)
+    # and a uniform-SNR pair still shares one batch
+    sch2 = SlotScheduler(scn, n_users=2, arrival_rate=0.0, batch_size=4,
+                         snr_db=20.0, seed=0)
+    sch2.inject_backlog(1)
+    assert len(sch2._plan_batches()) == 1
+
+
+def test_capacity_caps_compiled_batches_across_rungs():
+    """max_batches_per_tick is in compiled-batch units: two active rungs
+    cannot both run when the pool serves one batch per TTI — the
+    overflow jobs wait at their queue heads."""
+    lad = _ladder()
+    sch = SlotScheduler(lad, n_users=4, arrival_rate=0.0, batch_size=4,
+                        max_batches_per_tick=1, adapt=False, snr_db=20.0,
+                        seed=0)
+    sch.users[2].mcs = sch.users[3].mcs = 1  # two users per rung
+    sch.inject_backlog(1)
+    sch.tick()
+    assert sch.tick_log[0].n_served == 2  # one batch, not one per rung
+    assert sum(r.n_batches for r in sch.runners) == 1
+    assert sch.tick_log[0].backlog_after == 2  # overflow jobs kept
+    sch.tick()
+    assert sch.tick_log[1].n_served == 2
+    rep = sch.report()
+    assert rep.n_slots == 4 and rep.backlog_left == 0
+
+
+def test_closed_loop_matches_open_loop_on_clean_traffic():
+    """Zero-retransmission traffic through the closed loop serves every
+    slot exactly once, like the open-loop engine on the same count."""
+    scn = _small("siso-qpsk-r12-snr8", "rt-qpsk-clean", snr_db=30.0)
+    sch = SlotScheduler(scn, n_users=4, arrival_rate=0.0, batch_size=4,
+                        seed=7)
+    sch.inject_backlog(2)
+    rep = sch.run(2)
+    assert rep.n_slots == 8 and rep.blocks_lost == 0
+    assert rep.mean_harq_rounds == pytest.approx(1.0)
+    assert rep.first_tx_bler == 0.0 and rep.deadline_miss_rate == 0.0
+
+    eng = PhyServeEngine(build_pipeline("classical", scn), batch_size=4)
+    eng.submit_traffic(KEY, 8)
+    open_rep = eng.run(warmup=False)
+    assert open_rep.n_slots == rep.n_slots
+    assert open_rep.bler == 0.0
