@@ -1,0 +1,264 @@
+"""Low-precision (int8/fp8) kernel paths vs the fp32 baselines.
+
+Four views:
+
+* micro — quantized GEMM / MHA against the fp32 baseline: wall time,
+  numeric parity, and the modeled per-call energy at each precision
+  (`analysis/costmodel.block_energy` over the op's MAC count);
+* demap — fused equalize→demap LLRs on the quantized grid vs fp32 at
+  the registered waterfall operating points (sign-agreement parity);
+* bler — coded links through the int8 decoder: the quantized BLER at
+  the operating SNR must not exceed the fp32 BLER half a dB lower
+  (the ≤0.5 dB penalty gate);
+* e2e — `PhyServeEngine` serving one waterfall scenario per precision:
+  slots/sec, goodput, and the report's modeled GOPS/W.
+
+Standalone runs write ``experiments/phy/precision.json``, from which
+``scripts/make_experiments_md.py`` regenerates the docs/EXPERIMENTS.md
+per-precision tables.
+
+Flags:
+  --smoke   scaled-down batches; asserts the parity gates (≥99% LLR
+            sign agreement, ≤0.5 dB coded penalty) and that quantized
+            kernels win on the modeled-energy metric.  The wall-clock
+            not-slower gate additionally applies on TPU backends only:
+            XLA:CPU lowers int8/fp8 contractions through generic
+            (unvectorized) kernels, so host wall time says nothing
+            about the datapath the energy model prices.  Writes no
+            JSON.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, emit_json, time_jit
+from repro.analysis import costmodel
+from repro.core import pool
+from repro.kernels import mha, quant, ref, rx_fused, te_gemm
+from repro.phy.scenarios import get_scenario
+from repro.serve import PhyServeEngine
+
+KEY = jax.random.PRNGKey(0)
+JSON_PATH = "experiments/phy/precision.json"
+
+# coded waterfall operating points (scenario SNR sits on the BLER knee)
+WATERFALL = ["siso-qpsk-r12-snr8", "siso-qam16-r12-snr15"]
+E2E_SCENARIO = "siso-qam16-r12-snr15"
+PRECISIONS = ["fp32", "int8", "fp8"]
+
+SIGN_AGREE_MIN = 0.99
+BLER_PENALTY_DB = 0.5
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _gemm_energy_uj(m: int, n: int, k: int, precision: str) -> float:
+    cycles = pool.BlockCycles(
+        te_cycles=pool.te_cycles(m * n * k), pe_cycles=0.0,
+        dma_cycles=pool.dma_cycles(
+            (m * k + k * n) * quant.itemsize(precision) + 4 * m * n
+        ),
+    )
+    return costmodel.block_energy(cycles, precision=precision).total_j * 1e6
+
+
+def bench_micro(iters: int) -> list[dict]:
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    rows = []
+
+    m = n = k = 256
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    w = jax.random.normal(k2, (k, n), jnp.float32)
+    oracle = ref.te_gemm_ref(x, w, None, "none")
+    fns = {
+        "fp32": jax.jit(lambda x, w: jnp.dot(x, w)),
+        "int8": jax.jit(
+            lambda x, w: te_gemm.te_gemm_quant_jnp(x, w, precision="int8")
+        ),
+        "fp8": jax.jit(
+            lambda x, w: te_gemm.te_gemm_quant_jnp(x, w, precision="fp8")
+        ),
+    }
+    for p, fn in fns.items():
+        us = time_jit(fn, x, w, iters=iters)
+        rel = float(jnp.linalg.norm(fn(x, w) - oracle)
+                    / jnp.linalg.norm(oracle))
+        rows.append({
+            "op": "te_gemm", "precision": p, "us": round(us, 1),
+            "rel_err": round(rel, 5),
+            "model_uj": round(_gemm_energy_uj(m, n, k, p), 3),
+        })
+        emit(f"precision/te_gemm/{p}", us,
+             f"rel={rel:.4f} model_uj={rows[-1]['model_uj']}")
+
+    bh, s, d = 4, 256, 64
+    q = jax.random.normal(k1, (bh, s, d), jnp.float32)
+    kk = jax.random.normal(k2, (bh, s, d), jnp.float32)
+    v = jax.random.normal(k3, (bh, s, d), jnp.float32)
+    oracle = ref.mha_ref(q, kk, v, causal=False)
+    fns = {
+        "fp32": jax.jit(lambda q, k, v: ref.mha_ref(q, k, v, causal=False)),
+        "int8": jax.jit(lambda q, k, v: mha.mha_quant_jnp(
+            q, k, v, precision="int8", causal=False)),
+        "fp8": jax.jit(lambda q, k, v: mha.mha_quant_jnp(
+            q, k, v, precision="fp8", causal=False)),
+    }
+    mha_macs = bh * (s * s * d * 2 + s * d)
+    for p, fn in fns.items():
+        us = time_jit(fn, q, kk, v, iters=iters)
+        err = float(jnp.max(jnp.abs(fn(q, kk, v) - oracle)))
+        cyc = pool.BlockCycles(
+            te_cycles=pool.te_cycles(mha_macs), pe_cycles=0.0,
+            dma_cycles=pool.dma_cycles(
+                3 * bh * s * d * quant.itemsize(p) + 4 * bh * s * d
+            ),
+        )
+        uj = costmodel.block_energy(cyc, precision=p).total_j * 1e6
+        rows.append({
+            "op": "mha", "precision": p, "us": round(us, 1),
+            "max_err": round(err, 5), "model_uj": round(uj, 3),
+        })
+        emit(f"precision/mha/{p}", us,
+             f"err={err:.4f} model_uj={rows[-1]['model_uj']}")
+    return rows
+
+
+def check_micro_gates(rows: list[dict]) -> None:
+    for op in ("te_gemm", "mha"):
+        by_p = {r["precision"]: r for r in rows if r["op"] == op}
+        for p in ("int8", "fp8"):
+            assert by_p[p]["model_uj"] < by_p["fp32"]["model_uj"], (
+                f"{op}/{p}: modeled energy {by_p[p]['model_uj']}uJ not "
+                f"below fp32 {by_p['fp32']['model_uj']}uJ"
+            )
+            if _on_tpu():
+                assert by_p[p]["us"] <= by_p["fp32"]["us"] * 1.05, (
+                    f"{op}/{p}: quantized slower than fp32 on TPU "
+                    f"({by_p[p]['us']}us vs {by_p['fp32']['us']}us)"
+                )
+
+
+def bench_demap(batch: int) -> list[dict]:
+    rows = []
+    for name in WATERFALL:
+        scn = get_scenario(name)
+        slot = scn.make_batch(KEY, batch)
+        y, nv = slot["y"], slot["noise_var"]
+        h = jnp.mean(slot["h"], axis=1)
+        llr_ref = rx_fused.mmse_detect_demap(y, h, nv, scn.modem)[2]
+        for p in ("int8", "fp8"):
+            llr_q = rx_fused.mmse_detect_demap(
+                y, h, nv, scn.modem, precision=p
+            )[2]
+            agree = float(jnp.mean((llr_q > 0) == (llr_ref > 0)))
+            rows.append({
+                "scenario": name, "precision": p,
+                "sign_agree": round(agree, 5),
+            })
+            emit(f"precision/demap/{name}/{p}", 0.0, f"agree={agree:.4f}")
+    return rows
+
+
+def bench_bler(batch: int) -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(1)
+    for name in WATERFALL:
+        scn = get_scenario(name)
+        scn_m = scn.replace(snr_db=scn.snr_db - BLER_PENALTY_DB)
+
+        def bler_of(s, precision):
+            pipe = s.build(receiver="classical", precision=precision)
+            out = pipe.run(s.make_batch(key, batch))
+            blk = jnp.any(
+                out["info_bits_hat"] != out["info_bits"], axis=-1
+            )
+            return float(jnp.mean(blk.astype(jnp.float32)))
+
+        ref_bler = bler_of(scn, None)
+        ref_m = bler_of(scn_m, None)
+        for p in ("int8", "fp8"):
+            b = bler_of(scn, p)
+            rows.append({
+                "scenario": name, "precision": p, "bler": round(b, 5),
+                "fp32_bler": round(ref_bler, 5),
+                "fp32_bler_minus_half_db": round(ref_m, 5),
+            })
+            emit(f"precision/bler/{name}/{p}", 0.0,
+                 f"q={b:.4f} fp32={ref_bler:.4f} fp32-0.5dB={ref_m:.4f}")
+    return rows
+
+
+def check_link_gates(demap_rows: list[dict], bler_rows: list[dict]) -> None:
+    for r in demap_rows:
+        assert r["sign_agree"] >= SIGN_AGREE_MIN, (
+            f"{r['scenario']}/{r['precision']}: LLR sign agreement "
+            f"{r['sign_agree']:.4f} < {SIGN_AGREE_MIN}"
+        )
+    for r in bler_rows:
+        assert r["bler"] <= r["fp32_bler_minus_half_db"] + 1e-9, (
+            f"{r['scenario']}/{r['precision']}: quantized BLER "
+            f"{r['bler']:.4f} exceeds fp32 at -{BLER_PENALTY_DB} dB "
+            f"({r['fp32_bler_minus_half_db']:.4f})"
+        )
+
+
+def bench_e2e(n_slots: int, batch: int) -> list[dict]:
+    rows = []
+    for p in PRECISIONS:
+        eng = PhyServeEngine.from_scenario(
+            E2E_SCENARIO, receiver="classical", batch_size=batch,
+            precision=p,
+        )
+        eng.submit_traffic(KEY, n_slots)
+        rep = eng.run()
+        rows.append({
+            "scenario": E2E_SCENARIO, "precision": p,
+            "slots_per_sec": round(rep.slots_per_sec, 1),
+            "bler": round(rep.bler, 4) if rep.bler is not None else None,
+            "goodput_mbps": (
+                round(rep.info_bits_per_sec / 1e6, 2)
+                if rep.info_bits_per_sec is not None else None
+            ),
+            "gops_per_watt": round(rep.gops_per_watt, 1),
+            "l1_residency": round(rep.l1_residency, 3),
+            "energy_uj_per_slot": round(rep.energy_uj_per_slot, 3),
+        })
+        emit(f"precision/e2e/{p}", 1e6 / max(rep.slots_per_sec, 1e-9),
+             f"gops_w={rep.gops_per_watt:.0f} bler={rep.bler}")
+    return rows
+
+
+def main(json_default: str = ""):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=json_default,
+                    help="write the JSON emit here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: parity + modeled-energy win "
+                         "(+ wall-clock on TPU), no JSON")
+    args = ap.parse_args()
+
+    micro = bench_micro(iters=3 if args.smoke else 5)
+    demap = bench_demap(batch=4 if args.smoke else 16)
+    bler = bench_bler(batch=8 if args.smoke else 32)
+    if args.smoke:
+        check_micro_gates(micro)
+        check_link_gates(demap, bler)
+        print(
+            "smoke ok: LLR sign agreement >= 99%, coded penalty <= "
+            f"{BLER_PENALTY_DB} dB, quantized wins modeled energy"
+            + (", wall clock (tpu)" if _on_tpu() else "")
+        )
+        return
+    e2e = bench_e2e(n_slots=16, batch=4)
+    check_link_gates(demap, bler)
+    if args.json:
+        emit_json(args.json, {
+            "micro": micro, "demap": demap, "bler": bler, "e2e": e2e,
+        })
+
+
+if __name__ == "__main__":
+    main(json_default=JSON_PATH)

@@ -1,29 +1,123 @@
-"""Benchmark harness driver: one section per paper table/figure.
+"""Benchmark harness driver: one section per paper table/figure, plus the
+per-PR serving snapshot.
 
-Prints ``name,us_per_call,derived`` CSV lines.
+Default mode runs every section and prints ``name,us_per_call,derived``
+CSV lines (the sections' standalone JSON emits stay off — run a bench
+module directly to refresh its ``experiments/phy/*.json``):
 
-  fig5     — single-TE GEMM utilization vs size/bandwidth   (paper Fig. 5)
-  fig7     — 16-TE parallel GEMM + interleaved W access     (paper Fig. 7)
-  fig8     — PE kernels: BN/LN/softmax/ReLU/CFFT/LS/MMSE    (paper Fig. 8)
-  fig10    — sequential vs concurrent TE+PE+DMA blocks      (paper Fig. 10)
-  table2   — TensorPool vs TeraPool (accelerated vs PE-only)(paper Table II)
-  phy_e2e  — 1 ms TTI / 6 TFLOPS / 4 MiB L1 budget checks   (paper §II)
-  phy_mc   — multi-cell sharded serving scaling sweep       (beyond-paper)
-  roofline — per (arch x shape x mesh) dry-run roofline     (assignment §g)
+  fig5      — single-TE GEMM utilization vs size/bandwidth   (paper Fig. 5)
+  fig7      — 16-TE parallel GEMM + interleaved W access     (paper Fig. 7)
+  fig8      — PE kernels: BN/LN/softmax/ReLU/CFFT/LS/MMSE    (paper Fig. 8)
+  fig10     — sequential vs concurrent TE+PE+DMA blocks      (paper Fig. 10)
+  table2    — TensorPool vs TeraPool (accelerated vs PE-only)(paper Table II)
+  phy_e2e   — 1 ms TTI / 6 TFLOPS / 4 MiB L1 budget checks   (paper §II)
+  phy_mc    — multi-cell sharded serving scaling sweep       (beyond-paper)
+  roofline  — per (arch x shape x mesh) dry-run roofline     (assignment §g)
+  rx        — fused classical-receiver kernels vs references (beyond-paper)
+  coding    — LDPC decode + coded-link BLER waterfalls       (beyond-paper)
+  harq      — closed-loop HARQ/adaptive-MCS serving          (beyond-paper)
+  precision — int8/fp8 kernel paths + modeled GOPS/W         (beyond-paper)
+
+``--snapshot`` instead serves one coded waterfall scenario at fp32 /
+int8 / fp8 through ``PhyServeEngine`` and *appends* the result to the
+committed ``BENCH_phy.json`` at the repo root, keyed by the current git
+revision — the cross-PR perf trajectory (slots/sec, goodput, BLER,
+GOPS/W), where the old per-bench ``experiments/phy/*.json`` emits just
+overwrote each other.  Re-running on the same revision replaces that
+revision's entry, so a PR's snapshot converges instead of duplicating.
 """
+import argparse
+import json
+import os
+import subprocess
 import sys
+import time
 import traceback
 
+BENCH_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_phy.json",
+)
+SNAPSHOT_SCENARIO = "siso-qam16-r12-snr15"
+SNAPSHOT_PRECISIONS = ("fp32", "int8", "fp8")
+SNAPSHOT_SLOTS = 16
+SNAPSHOT_BATCH = 4
 
-def main() -> None:
+
+def git_rev() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(BENCH_PATH), text=True,
+        ).strip()
+    except Exception:
+        return "unknown"
+
+
+def snapshot_rows() -> list:
+    import jax
+
+    from repro.serve import PhyServeEngine
+
+    rows = []
+    for p in SNAPSHOT_PRECISIONS:
+        eng = PhyServeEngine.from_scenario(
+            SNAPSHOT_SCENARIO, receiver="classical",
+            batch_size=SNAPSHOT_BATCH, precision=p,
+        )
+        eng.submit_traffic(jax.random.PRNGKey(0), SNAPSHOT_SLOTS)
+        rep = eng.run()
+        rows.append({
+            "pipeline": rep.pipeline,
+            "precision": rep.precision,
+            "slots_per_sec": round(rep.slots_per_sec, 1),
+            "bler": round(rep.bler, 4) if rep.bler is not None else None,
+            "goodput_mbps": (
+                round(rep.info_bits_per_sec / 1e6, 2)
+                if rep.info_bits_per_sec is not None else None
+            ),
+            "gops_per_watt": round(rep.gops_per_watt, 1),
+            "l1_residency": round(rep.l1_residency, 3),
+        })
+        print(f"snapshot {rep.pipeline}: {rows[-1]}")
+    return rows
+
+
+def append_snapshot(path: str = BENCH_PATH) -> dict:
+    """Append (or replace, same revision) this checkout's serving snapshot."""
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            history = json.load(f)
+        assert isinstance(history, list), f"{path} is not a snapshot list"
+    rev = git_rev()
+    entry = {
+        "rev": rev,
+        "date": time.strftime("%Y-%m-%d"),
+        "scenario": SNAPSHOT_SCENARIO,
+        "rows": snapshot_rows(),
+    }
+    history = [e for e in history if e.get("rev") != rev] + [entry]
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(history)} snapshots, head rev {rev})")
+    return entry
+
+
+def run_sections() -> None:
     from benchmarks import (
+        bench_coding,
         bench_concurrent,
         bench_gemm,
+        bench_harq_serve,
         bench_parallel_gemm,
         bench_pe_kernels,
         bench_phy_e2e,
         bench_phy_multicell,
+        bench_precision,
         bench_roofline,
+        bench_rx_kernels,
         bench_table2,
     )
 
@@ -36,18 +130,41 @@ def main() -> None:
         ("phy_e2e", bench_phy_e2e),
         ("phy_mc", bench_phy_multicell),
         ("roofline", bench_roofline),
+        ("rx", bench_rx_kernels),
+        ("coding", bench_coding),
+        ("harq", bench_harq_serve),
+        ("precision", bench_precision),
     ]
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in sections:
+        # the folded per-bench mains parse sys.argv themselves; hand each
+        # a clean argv so the driver's own flags don't leak through
+        argv, sys.argv = sys.argv, [f"bench_{name}"]
         try:
             mod.main()
         except Exception as e:  # keep the harness running
             failures += 1
             print(f"{name}/FATAL,0.0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+        finally:
+            sys.argv = argv
     if failures:
         sys.exit(1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--snapshot", action="store_true",
+        help="append this checkout's serving snapshot to BENCH_phy.json "
+             "instead of running the full section harness",
+    )
+    args = ap.parse_args()
+    if args.snapshot:
+        append_snapshot()
+    else:
+        run_sections()
 
 
 if __name__ == "__main__":

@@ -8,6 +8,8 @@ Sources -> targets:
   experiments/phy/coding.json     -> docs/EXPERIMENTS.md  (coding tables)
   experiments/phy/harq.json       -> docs/EXPERIMENTS.md  (HARQ closed-loop
                                      tables)
+  experiments/phy/precision.json  -> docs/EXPERIMENTS.md  (int8/fp8 parity +
+                                     GOPS/W tables)
   repro.phy.scenarios registry    -> docs/SCENARIOS.md    (scenario table)
   repro.phy.scenarios ladders     -> docs/SERVING.md      (MCS-ladder table)
   experiments/dryrun/*.json       -> EXPERIMENTS.md       (legacy LM tables,
@@ -34,6 +36,7 @@ PHY_RX_KERNELS = "experiments/phy/rx_kernels.json"
 PHY_MULTICELL = "experiments/phy/multicell.json"
 PHY_CODING = "experiments/phy/coding.json"
 PHY_HARQ = "experiments/phy/harq.json"
+PHY_PRECISION = "experiments/phy/precision.json"
 
 
 def load_dryrun(d):
@@ -319,6 +322,61 @@ def harq_adapt_table(data):
     return "\n".join(rows)
 
 
+# -- low-precision tables (docs/EXPERIMENTS.md) -----------------------------
+
+def precision_micro_table(data):
+    """Quantized GEMM/MHA vs fp32: wall time, parity, modeled energy."""
+    rows = [
+        "| op | precision | µs | parity vs fp32 oracle | modeled µJ/call |",
+        "|---|---|---|---|---|",
+    ]
+    for r in data["micro"]:
+        parity = (f"rel err {r['rel_err']:.4f}" if "rel_err" in r
+                  else f"max err {r['max_err']:.4f}")
+        rows.append(
+            f"| {r['op']} | {r['precision']} | {r['us']} | {parity} | "
+            f"{r['model_uj']} |"
+        )
+    return "\n".join(rows)
+
+
+def precision_link_table(data):
+    """Quantized LLR plane: demap sign agreement + coded BLER penalty."""
+    agree = {(r["scenario"], r["precision"]): r["sign_agree"]
+             for r in data["demap"]}
+    rows = [
+        "| scenario | precision | LLR sign agreement | coded BLER | fp32 BLER | fp32 BLER @ −0.5 dB | within gate |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in data["bler"]:
+        a = agree.get((r["scenario"], r["precision"]))
+        ok = r["bler"] <= r["fp32_bler_minus_half_db"] + 1e-9
+        rows.append(
+            f"| `{r['scenario']}` | {r['precision']} | "
+            f"{_opt(a, '{:.2%}')} | {r['bler']:.4f} | "
+            f"{r['fp32_bler']:.4f} | {r['fp32_bler_minus_half_db']:.4f} | "
+            f"{'yes' if ok else 'NO'} |"
+        )
+    return "\n".join(rows)
+
+
+def precision_e2e_table(data):
+    """Per-precision serving: throughput, link quality, modeled GOPS/W."""
+    rows = [
+        "| scenario | precision | slots/s | BLER | goodput Mbit/s | modeled GOPS/W | L1 residency | µJ/slot |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for i, r in enumerate(data["e2e"]):
+        name = f"`{r['scenario']}`" if i == 0 else ""
+        rows.append(
+            f"| {name} | {r['precision']} | {r['slots_per_sec']} | "
+            f"{_opt(r['bler'])} | {_opt(r['goodput_mbps'], '{:.2f}')} | "
+            f"{r['gops_per_watt']} | {r['l1_residency']:.3f} | "
+            f"{r['energy_uj_per_slot']} |"
+        )
+    return "\n".join(rows)
+
+
 # -- scenario catalogue (docs/SCENARIOS.md) ---------------------------------
 
 def scenario_table():
@@ -423,6 +481,14 @@ def targets():
             sections += [
                 ("harq-sweep-table", harq_sweep_table(hq)),
                 ("harq-adapt-table", harq_adapt_table(hq)),
+            ]
+        if os.path.exists(PHY_PRECISION):
+            with open(PHY_PRECISION) as f:
+                pr = json.load(f)
+            sections += [
+                ("precision-micro-table", precision_micro_table(pr)),
+                ("precision-link-table", precision_link_table(pr)),
+                ("precision-e2e-table", precision_e2e_table(pr)),
             ]
         if sections:
             out.append(("docs/EXPERIMENTS.md",

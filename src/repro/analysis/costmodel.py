@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional
 
 from repro.configs.base import ModelConfig, ShapeConfig
 
@@ -163,6 +164,178 @@ def hbm_traffic(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshShape) -> dict:
 
     parts["total"] = total
     return parts
+
+
+# ---------------------------------------------------------------------------
+# PHY per-dtype energy model (paper: 8.4 TFLOPS in 4.3 W)
+# ---------------------------------------------------------------------------
+#
+# Calibration: at the paper's operating point — 16 TEs x 256 FP16
+# MACs/cycle at 1 GHz and 89% utilization (3.64e12 MAC/s, 7.3 TFLOPS) plus
+# ~1.1 TFLOPS of PE work — the model must burn ~4.3 W:
+#
+#   TE     3.64e12 MAC/s x 0.50 pJ/MAC             = 1.82 W
+#   PE     1.1e12 FLOP/s x 1.2  pJ/FLOP            = 1.32 W
+#   L1     2 ops x 2 B / 8-way reuse -> 1.82e12 B/s x 0.1 pJ/B = 0.18 W
+#   DMA    1024 B/cycle x 1 GHz x 0.4 pJ/B          = 0.41 W
+#   static (clock tree, SRAM leakage, NoC idle)     = 0.60 W
+#   total                                          ~= 4.33 W  (8.4 TFLOPS
+#                                                   -> ~1940 GFLOPS/W)
+#
+# Per-MAC energies scale with the paper's precision story: a MAC's energy
+# is dominated by the multiplier array, which shrinks quadratically in
+# mantissa width — fp8 (e4m3, 3-bit mantissa) edges out int8 (7-bit
+# significand datapath), both far below fp16 and fp32.  pJ values are in
+# the range surveyed for 7 nm datapaths (Horowitz ISSCC'14 scaled).
+
+PJ_PER_MAC = {
+    "fp32": 2.0,
+    "fp16": 0.5,
+    "bf16": 0.5,
+    "int8": 0.15,
+    "fp8": 0.14,
+}
+PJ_PER_FLOP_PE = 1.2  # RV32IMAF FPU op incl. regfile/issue overhead
+PJ_PER_BYTE_L1 = 0.1  # 4 MiB shared L1 SRAM access
+PJ_PER_BYTE_DMA = 0.4  # L2<->L1 DMA burst (1024 B/cycle fabric)
+STATIC_W = 0.6  # leakage + clock tree at 1 GHz
+CLOCK_HZ = 1.0e9
+L1_REUSE = 8.0  # operand reuse in the TE register file / X-W buffers
+_BASE_BYTES = 4  # stage DMA models price fp32/complex-split traffic
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyReport:
+    """Modeled energy for one block of PHY work at one precision."""
+    precision: str
+    macs: float        # TE MAC count
+    pe_flops: float    # PE (VPU) flop count
+    l1_bytes: float    # TE + PE operand traffic through L1
+    dma_bytes: float   # L2<->L1 DMA traffic
+    time_s: float      # modeled concurrent-schedule runtime
+
+    @property
+    def te_j(self) -> float:
+        return self.macs * PJ_PER_MAC[self.precision] * 1e-12
+
+    @property
+    def pe_j(self) -> float:
+        return self.pe_flops * PJ_PER_FLOP_PE * 1e-12
+
+    @property
+    def l1_j(self) -> float:
+        return self.l1_bytes * PJ_PER_BYTE_L1 * 1e-12
+
+    @property
+    def dma_j(self) -> float:
+        return self.dma_bytes * PJ_PER_BYTE_DMA * 1e-12
+
+    @property
+    def static_j(self) -> float:
+        return STATIC_W * self.time_s
+
+    @property
+    def dynamic_j(self) -> float:
+        return self.te_j + self.pe_j + self.l1_j + self.dma_j
+
+    @property
+    def total_j(self) -> float:
+        return self.dynamic_j + self.static_j
+
+    @property
+    def ops(self) -> float:
+        """Total arithmetic ops (2 flops per MAC + PE flops)."""
+        return 2.0 * self.macs + self.pe_flops
+
+    @property
+    def gops_per_watt(self) -> float:
+        """ops/joule == (ops/s)/W, in giga-ops."""
+        return self.ops / max(self.total_j, 1e-30) * 1e-9
+
+    @property
+    def l1_residency(self) -> float:
+        """Fraction of operand traffic served from L1 (vs DMA'd): the
+        paper's reuse argument — higher is the 9.1x GOPS/W/mm2 story."""
+        tot = self.l1_bytes + self.dma_bytes
+        return self.l1_bytes / tot if tot > 0 else 0.0
+
+    @property
+    def avg_power_w(self) -> float:
+        return self.total_j / max(self.time_s, 1e-30)
+
+    def scaled(self, factor: float) -> "EnergyReport":
+        """The same work repeated ``factor`` times (e.g. per-slot ->
+        per-batch); intensive properties are invariant."""
+        return dataclasses.replace(
+            self, macs=self.macs * factor, pe_flops=self.pe_flops * factor,
+            l1_bytes=self.l1_bytes * factor,
+            dma_bytes=self.dma_bytes * factor,
+            time_s=self.time_s * factor,
+        )
+
+
+def _precision_bytes(precision: str) -> int:
+    from repro.kernels import quant
+
+    return quant.itemsize(precision)
+
+
+def block_energy(cycles, precision: str = "fp32",
+                 clock_hz: float = CLOCK_HZ) -> EnergyReport:
+    """Price a :class:`repro.core.pool.BlockCycles` at a precision.
+
+    Work quantities invert the pool cycle model (te_cycles/pe_cycles/
+    dma_cycles are each derived from MACs/flops/bytes by fixed rates, so
+    the inversion is exact).  Precision scales the TE pJ/MAC and the
+    operand *traffic* (int8 tensors move a quarter of the fp32 bytes);
+    PE work stays on the fp32/fp16 vector units.
+    """
+    from repro.core import pool
+    from repro.kernels import quant
+
+    precision = quant.resolve_precision(precision)
+    macs = cycles.te_cycles * pool.N_TES * pool.TE_MACS_PER_CYCLE * 0.89
+    pe_flops = cycles.pe_cycles * pool.N_PES * 2 * pool.PE_MACS_PER_CYCLE * 0.6
+    bscale = _precision_bytes(precision) / _BASE_BYTES
+    dma_bytes = cycles.dma_cycles * 1024.0 * bscale
+    # TE operands at the storage width (register-file reuse), plus the PE
+    # lanes' fp32 operand reads — both served from the shared L1 SRAM
+    l1_bytes = (2.0 * macs * _precision_bytes(precision)
+                + pe_flops * 4.0) / L1_REUSE
+    return EnergyReport(
+        precision=precision, macs=macs, pe_flops=pe_flops,
+        l1_bytes=l1_bytes, dma_bytes=dma_bytes,
+        time_s=cycles.concurrent() / clock_hz,
+    )
+
+
+def pipeline_energy(pipeline, precision: Optional[str] = None,
+                    clock_hz: float = CLOCK_HZ) -> EnergyReport:
+    """Per-slot modeled energy for a ReceiverPipeline (sums the per-stage
+    BlockCycles models).  ``precision`` defaults to the pipeline's own
+    policy (``pipeline.precision``, fp32 if absent)."""
+    if precision is None:
+        precision = getattr(pipeline, "precision", "fp32") or "fp32"
+    return block_energy(pipeline.total_cycles(), precision,
+                        clock_hz=clock_hz)
+
+
+def calibration_point() -> EnergyReport:
+    """The paper's full-rate fp16 operating point (for tests/docs): one
+    second of saturated TEs+PEs+DMA — should land at ~4.3 W and
+    ~1900 GOPS/W."""
+    from repro.core import pool
+
+    full = pool.BlockCycles(
+        te_cycles=CLOCK_HZ, pe_cycles=CLOCK_HZ, dma_cycles=CLOCK_HZ
+    )
+    macs = CLOCK_HZ * pool.N_TES * pool.TE_MACS_PER_CYCLE * 0.89
+    pe_flops = 1.1e12  # paper: PEs contribute ~1.1 of the 8.4 TFLOPS
+    return EnergyReport(
+        precision="fp16", macs=macs, pe_flops=pe_flops,
+        l1_bytes=(2.0 * macs * 2 + pe_flops * 4.0) / L1_REUSE,
+        dma_bytes=1024.0 * CLOCK_HZ, time_s=1.0,
+    )
 
 
 def _kv_cache_bytes(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshShape

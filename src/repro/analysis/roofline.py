@@ -49,6 +49,10 @@ class RooflineReport:
     collective_counts: dict = dataclasses.field(default_factory=dict)
     xla_flops_raw: float = 0.0  # cost_analysis() as-is (loop bodies once)
     hbm_bytes_unfused: float = 0.0  # parsed boundary bytes (upper bound)
+    # modeled energy (per-dtype pJ/MAC + pJ/byte; see costmodel)
+    precision: str = "bf16"
+    energy_j: float = 0.0  # per device per step
+    gops_per_watt: float = 0.0
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -73,6 +77,7 @@ def build_report(
     xla_flops_raw: float = 0.0,
     hbm_capacity: float = 16e9,
     hbm_bytes_model: Optional[float] = None,
+    precision: str = "bf16",
 ) -> RooflineReport:
     """FLOPs/collectives come from the compiled artifact (hloparse);
     the memory term uses the kernel-aware cost model when provided
@@ -125,7 +130,29 @@ def build_report(
         rep.fits_hbm = (
             rep.arg_bytes + rep.temp_bytes + rep.out_bytes
         ) < hbm_capacity
+    rep.precision = precision
+    rep.energy_j = step_energy_j(
+        prof.flops, hbm_bytes, t_overlap, precision
+    )
+    rep.gops_per_watt = (
+        prof.flops / rep.energy_j * 1e-9 if rep.energy_j > 0 else 0.0
+    )
     return rep
+
+
+def step_energy_j(flops: float, hbm_bytes: float, step_s: float,
+                  precision: str = "bf16") -> float:
+    """Modeled joules per device-step: executed FLOPs at the precision's
+    pJ/MAC (2 flops/MAC), HBM traffic at the DMA pJ/byte, plus static
+    power over the step — the same per-dtype constants the PHY serve
+    reports use (costmodel), applied to the compiled artifact's counts."""
+    from repro.analysis import costmodel as _cm
+    from repro.kernels import quant as _q
+
+    p = _q.resolve_precision(precision)
+    dyn_pj = (flops / 2.0 * _cm.PJ_PER_MAC[p]
+              + hbm_bytes * _cm.PJ_PER_BYTE_DMA)
+    return dyn_pj * 1e-12 + _cm.STATIC_W * step_s
 
 
 # -- ideal model FLOPs --------------------------------------------------------

@@ -44,7 +44,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import tune
+from repro.kernels import quant, tune
 from repro.kernels.runtime import compiler_params, resolve_interpret
 
 DEFAULT_MAX_ITERS = 12
@@ -148,6 +148,104 @@ def _decode_core(v0: jax.Array, layers: tuple, max_iters: int,
     return v, iters
 
 
+# ---------------------------------------------------------------------------
+# int8 LLR-state variant (saturating min/sum — what baseband silicon ships)
+# ---------------------------------------------------------------------------
+
+_INT_INF = 32767  # second-min sentinel (python int: kernels bake it in)
+# Posterior accumulator saturation: check messages stay on the int8 grid,
+# but the variable-node state gets 12-bit headroom (a standard min-sum
+# datapath split).  At the registered operating points the channel LLRs sit
+# near the int8 clip, so an int8 accumulator saturates on the *first*
+# extrinsic add and the decoder loses ~2 dB; four extra accumulator bits
+# recover the fp32 waterfall to within the 0.5 dB parity gate.
+_SAT_V = 2047
+
+
+def _layered_iteration_q(v: jax.Array, c2v: tuple, layers: tuple,
+                         alpha: float):
+    """One layered sweep in saturating integer arithmetic.
+
+    Check messages live on the symmetric int8 grid [-127, 127]; the
+    posterior state saturates at the 12-bit ``_SAT_V`` (both carried in
+    int32 lanes — the *values* are narrow).  min / second-min / sign-
+    product are exact in integers; the alpha damping is the fixed-point
+    multiply ``(mag * round(alpha*256)) >> 8``; every write back
+    saturates — the silicon datapath, not a float emulation.
+    """
+    new_c2v = []
+    for li, edges in enumerate(layers):
+        t = jnp.stack(
+            [jnp.roll(v[c], -s, axis=0) for c, s in edges]
+        ) - c2v[li]  # (E, z, bt): |t| <= 254, exact in int32
+        at = jnp.abs(t)
+        sg = jnp.where(t < 0, jnp.int32(-1), jnp.int32(1))
+        m1 = jnp.min(at, axis=0, keepdims=True)
+        amin = jnp.argmin(at, axis=0)
+        is_min = (
+            jax.lax.broadcasted_iota(jnp.int32, at.shape, 0) == amin[None]
+        )
+        m2 = jnp.min(jnp.where(is_min, _INT_INF, at), axis=0,
+                     keepdims=True)
+        mag = jnp.where(is_min, m2, m1)
+        par = jnp.prod(sg, axis=0, keepdims=True)
+        upd = quant.sat8(par * sg * quant.scale_q8(mag, alpha))
+        vn = jnp.clip(t + upd, -_SAT_V, _SAT_V)
+        for e, (c, s) in enumerate(edges):
+            v = v.at[c].set(jnp.roll(vn[e], s, axis=0))
+        new_c2v.append(upd)
+    return v, tuple(new_c2v)
+
+
+def _decode_core_q(v0: jax.Array, layers: tuple, max_iters: int,
+                   alpha: float, step: float):
+    """Int8 twin of :func:`_decode_core`: quantize the fp32 channel lanes
+    onto the int8 grid (``step`` LLR units per code), iterate with
+    saturating arithmetic, dequantize the posterior.  Min-sum is scale-
+    equivariant, so one scalar ``step`` round-trips the whole decode."""
+    vq0 = jnp.clip(
+        jnp.round(v0.astype(jnp.float32) / step), -127, 127
+    ).astype(jnp.int32)
+    c2v0 = tuple(
+        jnp.zeros((len(e),) + vq0.shape[1:], jnp.int32) for e in layers
+    )
+    done0 = _syndrome_ok(vq0, layers)
+    iters0 = jnp.zeros((vq0.shape[-1],), jnp.int32)
+
+    def cond(carry):
+        it, _, _, done, _ = carry
+        return jnp.logical_and(it < max_iters,
+                               jnp.logical_not(jnp.all(done)))
+
+    def body(carry):
+        it, v, c2v, done, iters = carry
+        vn, c2vn = _layered_iteration_q(v, c2v, layers, alpha)
+        keep = done[None, None, :]
+        v = jnp.where(keep, v, vn)
+        c2v = tuple(
+            jnp.where(keep, a, b) for a, b in zip(c2v, c2vn)
+        )
+        iters = iters + jnp.where(done, 0, 1)
+        done = jnp.logical_or(done, _syndrome_ok(v, layers))
+        return it + 1, v, c2v, done, iters
+
+    _, vq, _, _, iters = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), vq0, c2v0, done0, iters0)
+    )
+    return vq.astype(jnp.float32) * step, iters
+
+
+def _core_for(precision):
+    """The decode core for a precision policy: fp32 lanes in/out either
+    way; int8/fp8 select the saturating integer state (LLR state is
+    integer in silicon for both 1-byte policies)."""
+    if precision is None or not quant.is_quantized(precision):
+        return _decode_core
+    return functools.partial(
+        _decode_core_q, step=float(quant.llr_scale())
+    )
+
+
 def _to_lanes(llr: jax.Array, n_b: int, z: int) -> jax.Array:
     """(B, n_b*z) repo-convention LLRs -> (n_b, z, B) internal state.
 
@@ -172,9 +270,11 @@ def _from_lanes(v: jax.Array) -> jax.Array:
 
 def ldpc_decode_jnp(llr: jax.Array, code, *,
                     max_iters: int = DEFAULT_MAX_ITERS,
-                    alpha: float = DEFAULT_ALPHA):
+                    alpha: float = DEFAULT_ALPHA,
+                    precision: Optional[str] = None):
     """llr (B, n_mother) -> (posterior LLRs (B, n_mother), iters (B,))."""
-    v, iters = _decode_core(
+    core = _core_for(precision)
+    v, iters = core(
         _to_lanes(llr, code.n_b, code.z), code.layers(), max_iters, alpha
     )
     return _from_lanes(v), iters
@@ -185,11 +285,11 @@ def ldpc_decode_jnp(llr: jax.Array, code, *,
 # ---------------------------------------------------------------------------
 
 def _ldpc_kernel(v_ref, out_ref, it_ref, *, layers: tuple, max_iters: int,
-                 alpha: float):
+                 alpha: float, precision: Optional[str] = None):
     """Grid: (batch_tiles,).  The whole iteration loop runs in-kernel, so
     the (n_b, z, bt) state and the per-layer check messages never leave
     VMEM between iterations."""
-    v, iters = _decode_core(v_ref[...], layers, max_iters, alpha)
+    v, iters = _core_for(precision)(v_ref[...], layers, max_iters, alpha)
     out_ref[...] = v
     it_ref[...] = iters[None, :].astype(jnp.int32)
 
@@ -205,7 +305,8 @@ def ldpc_decode_pallas(llr: jax.Array, code, *,
                        max_iters: int = DEFAULT_MAX_ITERS,
                        alpha: float = DEFAULT_ALPHA,
                        block_b: Optional[int] = None,
-                       interpret: Optional[bool] = None):
+                       interpret: Optional[bool] = None,
+                       precision: Optional[str] = None):
     interpret = resolve_interpret(interpret)
     b = llr.shape[0]
     n_b, z = code.n_b, code.z
@@ -220,7 +321,7 @@ def ldpc_decode_pallas(llr: jax.Array, code, *,
 
     kernel = functools.partial(
         _ldpc_kernel, layers=code.layers(), max_iters=max_iters,
-        alpha=float(alpha),
+        alpha=float(alpha), precision=precision,
     )
     v, iters = pl.pallas_call(
         kernel,
@@ -247,16 +348,23 @@ def ldpc_decode(llr: jax.Array, code, *,
                 alpha: float = DEFAULT_ALPHA,
                 block_b: Optional[int] = None,
                 use_pallas: Optional[bool] = None,
-                interpret: Optional[bool] = None):
+                interpret: Optional[bool] = None,
+                precision: Optional[str] = None):
     """Layered normalized-min-sum decode; backend-dispatched (module doc).
 
     ``llr`` (B, n_mother) in the repo's log P(1)/P(0) convention (zero =
     punctured/erased).  Returns (posterior LLRs, per-codeword iteration
     counts); hard decisions are ``posterior > 0``.
+
+    ``precision="int8"|"fp8"`` runs the saturating int8 LLR-state variant
+    (channel LLRs quantized onto the :mod:`repro.kernels.quant` grid,
+    integer min/sign/damping, saturating adds); posterior LLRs come back
+    dequantized to fp32 so callers are dtype-stable.
     """
     if _use_pallas(use_pallas):
         return ldpc_decode_pallas(
             llr, code, max_iters=max_iters, alpha=alpha, block_b=block_b,
-            interpret=interpret,
+            interpret=interpret, precision=precision,
         )
-    return ldpc_decode_jnp(llr, code, max_iters=max_iters, alpha=alpha)
+    return ldpc_decode_jnp(llr, code, max_iters=max_iters, alpha=alpha,
+                           precision=precision)

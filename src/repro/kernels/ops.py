@@ -48,6 +48,30 @@ def mha(q, k, v, causal: bool = True, bq=None, bkv=None):
 
 
 @functools.partial(
+    jax.jit, static_argnames=("precision", "epilogue", "block_shape")
+)
+def te_gemm_quant(x, w, bias=None, precision: str = "int8",
+                  epilogue: str = "none", block_shape=None):
+    """Quantized GEMM: int8/fp8 storage, fp32 accumulate + dequant."""
+    return _te.te_gemm_quant(
+        x, w, bias, precision=precision, epilogue=epilogue,
+        block_shape=block_shape, interpret=resolve_interpret(None),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("precision", "causal", "bq", "bkv")
+)
+def mha_quant(q, k, v, precision: str = "int8", causal: bool = True,
+              bq: int = 128, bkv: int = 128):
+    """Quantized flash attention (per-head scales, fp32 softmax)."""
+    return _mha.mha_quant(
+        q, k, v, precision=precision, causal=causal, bq=bq, bkv=bkv,
+        interpret=resolve_interpret(None),
+    )
+
+
+@functools.partial(
     jax.jit, static_argnames=("modem", "block_sc", "use_pallas")
 )
 def mmse_detect_demap(y, h, noise_var, modem, block_sc=None,

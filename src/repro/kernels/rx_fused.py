@@ -37,7 +37,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import tune
+from repro.kernels import quant, tune
 from repro.kernels.runtime import compiler_params, resolve_interpret
 
 
@@ -317,13 +317,52 @@ def mmse_detect_demap(
     block_sc: Optional[int] = None,
     use_pallas: Optional[bool] = None,
     interpret: Optional[bool] = None,
+    precision: Optional[str] = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Fused MMSE equalize→demap; backend-dispatched (see module doc)."""
+    """Fused MMSE equalize→demap; backend-dispatched (see module doc).
+
+    ``precision="int8"|"fp8"`` emits LLRs rounded onto the fixed int8 grid
+    of :mod:`repro.kernels.quant` (what the quantized decode stage and
+    baseband silicon consume); the returned array stays fp32 so the rest
+    of the chain is shape/dtype-stable.  Use
+    :func:`mmse_detect_demap_int8` for the raw (int8 codes, scale) pair.
+    """
     if _use_pallas(use_pallas):
-        return mmse_detect_demap_pallas(
+        out = mmse_detect_demap_pallas(
             y, h, noise_var, modem, block_sc=block_sc, interpret=interpret
         )
-    return mmse_detect_demap_jnp(y, h, noise_var, modem)
+    else:
+        out = mmse_detect_demap_jnp(y, h, noise_var, modem)
+    if precision is None or not quant.is_quantized(precision):
+        return out
+    x_hat, nv_eff, llr = out
+    return x_hat, nv_eff, quant.fake_quant_llr(llr, precision)
+
+
+def mmse_detect_demap_int8(
+    y: jax.Array,
+    h: jax.Array,
+    noise_var: jax.Array,
+    modem,
+    *,
+    block_sc: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    llr_clip: float = quant.LLR_CLIP,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Quantized-LLR demap: (x_hat, nv_eff, llr_q int8, scale fp32).
+
+    ``dequantize_llr(llr_q, scale)`` reproduces exactly what the
+    ``precision="int8"`` path of :func:`mmse_detect_demap` feeds the
+    decoder; the int8 codes are what a hardware demapper would DMA out
+    (4x smaller than the fp32 LLR plane).
+    """
+    x_hat, nv_eff, llr = mmse_detect_demap(
+        y, h, noise_var, modem, block_sc=block_sc, use_pallas=use_pallas,
+        interpret=interpret,
+    )
+    llr_q, scale = quant.quantize_llr(llr, clip=llr_clip)
+    return x_hat, nv_eff, llr_q, scale
 
 
 # ---------------------------------------------------------------------------

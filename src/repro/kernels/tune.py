@@ -53,10 +53,12 @@ def default_cache_path() -> str:
 
 
 def cache_key(op: str, shape: Sequence[int], extra: str = "",
-              backend: Optional[str] = None) -> str:
+              backend: Optional[str] = None,
+              objective: str = "latency") -> str:
     backend = backend or jax.default_backend()
     dims = "x".join(str(int(d)) for d in shape)
-    return "|".join(p for p in (op, dims, extra, backend) if p)
+    obj = "" if objective == "latency" else f"obj-{objective}"
+    return "|".join(p for p in (op, dims, extra, obj, backend) if p)
 
 
 class TuneCache:
@@ -134,10 +136,11 @@ def set_cache_path(path: Optional[str]):
     _CACHE = None
 
 
-def cached_choice(op: str, shape: Sequence[int],
-                  extra: str = "") -> Optional[tuple]:
+def cached_choice(op: str, shape: Sequence[int], extra: str = "",
+                  objective: str = "latency") -> Optional[tuple]:
     """The persisted winner for (op, shape, extra) on this backend, if any."""
-    return get_cache().lookup(cache_key(op, shape, extra))
+    return get_cache().lookup(cache_key(op, shape, extra,
+                                        objective=objective))
 
 
 # ---------------------------------------------------------------------------
@@ -159,19 +162,35 @@ def _median_us(fn: Callable, warmup: int = 1, iters: int = 3) -> float:
 
 def autotune(op: str, shape: Sequence[int], candidates: Sequence[tuple],
              run: Callable[[tuple], object], *, extra: str = "",
-             iters: int = 3, cache: Optional[TuneCache] = None) -> tuple:
-    """Time ``run(candidate)`` for every candidate, persist + return the
-    winner.  ``run`` must return a jax value (blocked on for timing)."""
+             iters: int = 3, cache: Optional[TuneCache] = None,
+             objective: str = "latency",
+             energy_fn: Optional[Callable[[tuple, float], float]] = None,
+             ) -> tuple:
+    """Measure ``run(candidate)`` for every candidate, persist + return the
+    winner.  ``run`` must return a jax value (blocked on for timing).
+
+    ``objective="latency"`` picks the minimum median microseconds.
+    ``objective="energy"`` picks the minimum *modeled joules per call*:
+    ``energy_fn(candidate, us)`` prices the candidate's dynamic energy
+    (its tiling decides the HBM<->VMEM stream traffic) plus the static
+    power burned over the measured wall time — so a tiling that trades a
+    little latency for a lot less traffic can win.  The two objectives
+    persist under distinct cache keys (round-trippable side by side).
+    """
     assert candidates, f"no tiling candidates for {op} {shape}"
+    assert objective in ("latency", "energy"), objective
+    if objective == "energy":
+        assert energy_fn is not None, "objective='energy' needs energy_fn"
     cache = cache or get_cache()
     best = None
     for cand in candidates:
         us = _median_us(lambda: run(cand), iters=iters)
-        if best is None or us < best[0]:
-            best = (us, cand)
-    us, choice = best
-    cache.store(cache_key(op, shape, extra), choice, us,
-                n_candidates=len(candidates))
+        score = us if objective == "latency" else energy_fn(cand, us)
+        if best is None or score < best[0]:
+            best = (score, us, cand)
+    _, us, choice = best
+    cache.store(cache_key(op, shape, extra, objective=objective), choice,
+                us, n_candidates=len(candidates))
     return choice
 
 
@@ -184,20 +203,57 @@ def _divisor_cands(n: int, cands: Sequence[int]) -> list[int]:
     return out or [n]
 
 
+def gemm_energy_fn(m: int, n: int, k: int, precision: str,
+                   out_bytes: int = 4) -> Callable[[tuple, float], float]:
+    """Modeled joules/call for a te_gemm tiling: MAC energy at the dtype's
+    pJ/MAC (tiling-invariant) + HBM<->VMEM stream traffic priced at the DMA
+    pJ/byte (X re-streams n/bn times, W m/bm times, Z written once) +
+    static power over the measured wall time."""
+    from repro.analysis import costmodel as _cm
+    from repro.kernels import quant as _q
+
+    nbytes = _q.itemsize(precision)
+    pj_mac = _cm.PJ_PER_MAC[_q.resolve_precision(precision)]
+
+    def joules(cand: tuple, us: float) -> float:
+        bm, bn, bk = cand
+        bytes_moved = (nbytes * (m * k * (n // bn) + k * n * (m // bm))
+                       + out_bytes * m * n)
+        dyn_pj = m * n * k * pj_mac + bytes_moved * _cm.PJ_PER_BYTE_DMA
+        return dyn_pj * 1e-12 + _cm.STATIC_W * us * 1e-6
+
+    return joules
+
+
 def autotune_gemm(m: int, n: int, k: int, dtype=None, *,
-                  iters: int = 3, cache: Optional[TuneCache] = None) -> tuple:
-    """Tune (bm, bn, bk) for ``te_gemm`` at (m, n, k) and persist it."""
+                  iters: int = 3, cache: Optional[TuneCache] = None,
+                  objective: str = "latency") -> tuple:
+    """Tune (bm, bn, bk) for ``te_gemm`` at (m, n, k) and persist it.
+
+    Keys on the dtype *name* (``bfloat16`` / ``int8`` / ``float8_e4m3fn``),
+    never on itemsize — the 1-byte dtypes would collide.  Quantized dtypes
+    run the quantized kernel so the winner reflects the dequant epilogue.
+    """
     import jax.numpy as jnp
 
     from repro.core.balance import tile_vmem_bytes
     from repro.core.machine import TPU_V5E
+    from repro.kernels import quant as _q
     from repro.kernels import te_gemm as _te
 
     dtype = dtype or jnp.bfloat16
     dtype = jnp.dtype(dtype)
+    precision = _q.precision_of_dtype(dtype)
     kx, kw = jax.random.split(jax.random.PRNGKey(0))
-    x = jax.random.normal(kx, (m, k), jnp.float32).astype(dtype)
-    w = jax.random.normal(kw, (k, n), jnp.float32).astype(dtype)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    if _q.is_quantized(precision):
+        run = lambda c: _te.te_gemm_quant(
+            x, w, precision=precision, block_shape=c
+        )
+    else:
+        x, w = x.astype(dtype), w.astype(dtype)
+        run = lambda c: _te.te_gemm(x, w, block_shape=c)
     budget = TPU_V5E.fast_mem_bytes // 2
     cands = [
         (bm, bn, bk)
@@ -207,9 +263,10 @@ def autotune_gemm(m: int, n: int, k: int, dtype=None, *,
         if tile_vmem_bytes(bm, bn, bk, dtype.itemsize) <= budget
     ]
     return autotune(
-        "te_gemm", (m, n, k), cands,
-        lambda c: _te.te_gemm(x, w, block_shape=c),
-        extra=f"b{dtype.itemsize}", iters=iters, cache=cache,
+        "te_gemm", (m, n, k), cands, run,
+        extra=_q.dtype_name(dtype), iters=iters, cache=cache,
+        objective=objective,
+        energy_fn=gemm_energy_fn(m, n, k, precision),
     )
 
 

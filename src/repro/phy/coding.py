@@ -416,7 +416,8 @@ def coded_llrs(scenario, llr: jax.Array) -> jax.Array:
 def decode_blocks(scenario, llr: jax.Array, *, max_iters: int = 12,
                   alpha: float = 0.8, use_pallas: Optional[bool] = None,
                   interpret: Optional[bool] = None, rv=None,
-                  prior_llr: Optional[jax.Array] = None) -> dict:
+                  prior_llr: Optional[jax.Array] = None,
+                  precision: Optional[str] = None) -> dict:
     """Full receive-side coding chain on a finished detector state's LLRs.
 
     Returns ``info_bits_hat`` (B, C, k_info), ``crc_ok`` (B, C),
@@ -435,7 +436,7 @@ def decode_blocks(scenario, llr: jax.Array, *, max_iters: int = 12,
     b, c, n = cw_llr.shape
     post, iters = ldpc.ldpc_decode(
         cw_llr.reshape(b * c, n), code, max_iters=max_iters, alpha=alpha,
-        use_pallas=use_pallas, interpret=interpret,
+        use_pallas=use_pallas, interpret=interpret, precision=precision,
     )
     hard = (post[:, : code.k] > 0).astype(jnp.int32)
     ok = crc_check(hard, code.crc_bits)

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pool
-from repro.kernels import rx_fused
+from repro.kernels import quant, rx_fused
 from repro.phy import classical, coding, models, ofdm
 from repro.phy.scenarios import LinkScenario
 
@@ -72,11 +72,15 @@ class ReceiverPipeline:
     """
 
     def __init__(self, name: str, stages: list[RxStage],
-                 scenario: LinkScenario, params=None):
+                 scenario: LinkScenario, params=None,
+                 precision: str = "fp32"):
         self.name = name
         self.stages = tuple(stages)
         self.scenario = scenario
         self.params = params  # neural weights, None for classical chains
+        # numeric policy of the served datapath (see repro.kernels.quant);
+        # the energy model prices TE MACs and operand traffic at this
+        self.precision = quant.resolve_precision(precision)
         self._jitted = jax.jit(self._apply)
 
     def _apply(self, slot: dict) -> dict:
@@ -117,6 +121,13 @@ class ReceiverPipeline:
             "tti_utilization": conc_ms / (tti_s * 1e3),
             "fits_tti": bool(conc_ms <= tti_s * 1e3),
         }
+
+    def energy_report(self, clock_hz: float = 1e9):
+        """Per-slot modeled :class:`repro.analysis.costmodel.EnergyReport`
+        at this pipeline's precision policy."""
+        from repro.analysis import costmodel
+
+        return costmodel.pipeline_energy(self, clock_hz=clock_hz)
 
 
 # ---------------------------------------------------------------------------
@@ -290,19 +301,22 @@ def _broadcast_h(h_est, n_sym):
     return hb.reshape(b * n_sym, n_sc, n_rx, n_tx)
 
 
-def detect_demap_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem) -> RxStage:
+def detect_demap_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem,
+                       precision: Optional[str] = None) -> RxStage:
     """Fused equalize→demap (replaces detect_stage + demod_stage).
 
     One :mod:`repro.kernels.rx_fused` pass per (batch, subcarrier) tile:
     Gram, in-register Gauss solve, unbiasing, and max-log LLRs — the
     ``h_eff`` / Gram / equalized-symbol grids stay in L1 instead of
-    round-tripping between two stages.
+    round-tripping between two stages.  ``precision="int8"|"fp8"`` emits
+    LLRs on the quantized grid (see :func:`rx_fused.mmse_detect_demap`).
     """
 
     def apply(state):
         h_est = state.get("h_hat", state.get("h_ls"))
         x_hat, nv_eff, llr = rx_fused.mmse_detect_demap(
-            state["y"], h_est, state["noise_var"], modem
+            state["y"], h_est, state["noise_var"], modem,
+            precision=precision,
         )
         state["x_hat"], state["nv_eff"], state["llr"] = x_hat, nv_eff, llr
         return state
@@ -331,13 +345,14 @@ def detect_demap_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem) -> RxStage:
 
 
 def detect_stage(cfg: ofdm.GridConfig, fused: bool = False,
-                 modem: Optional[ofdm.Modem] = None) -> RxStage:
+                 modem: Optional[ofdm.Modem] = None,
+                 precision: Optional[str] = None) -> RxStage:
     """MIMO-MMSE detection; ``fused=True`` (requires ``modem``) returns the
     combined :func:`detect_demap_stage` — the demap rides inside it, so
     builders must then skip :func:`demod_stage`."""
     if fused:
         assert modem is not None, "fused detect+demap needs the modem"
-        return detect_demap_stage(cfg, modem)
+        return detect_demap_stage(cfg, modem, precision=precision)
 
     def apply(state):
         h_est = state.get("h_hat", state.get("h_ls"))
@@ -365,9 +380,13 @@ def detect_stage(cfg: ofdm.GridConfig, fused: bool = False,
     return RxStage("mmse_detect", "PE", apply, cycles)
 
 
-def demod_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem) -> RxStage:
+def demod_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem,
+                precision: Optional[str] = None) -> RxStage:
     def apply(state):
-        state["llr"] = modem.demod_llr(state["x_hat"], state["nv_eff"])
+        llr = modem.demod_llr(state["x_hat"], state["nv_eff"])
+        if precision is not None and quant.is_quantized(precision):
+            llr = quant.fake_quant_llr(llr, precision)
+        state["llr"] = llr
         return state
 
     def cycles():
@@ -386,7 +405,8 @@ def demod_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem) -> RxStage:
 
 
 def decode_stage(scenario: LinkScenario, *, max_iters: int = 12,
-                 alpha: float = 0.8) -> RxStage:
+                 alpha: float = 0.8,
+                 precision: Optional[str] = None) -> RxStage:
     """CRC + LDPC decode of the slot's transport blocks (coded scenarios).
 
     Gathers the data-RE LLRs in the canonical codeword order, de-rate-
@@ -421,6 +441,7 @@ def decode_stage(scenario: LinkScenario, *, max_iters: int = 12,
             coding.decode_blocks(
                 scenario, state["llr"], max_iters=max_iters, alpha=alpha,
                 rv=state.get("rv"), prior_llr=state.get("prior_llr"),
+                precision=precision,
             )
         )
         return state
@@ -442,6 +463,21 @@ def decode_stage(scenario: LinkScenario, *, max_iters: int = 12,
         )
 
     return RxStage("ldpc_decode", "PE", apply, cycles)
+
+
+def llr_quant_stage(precision: str) -> RxStage:
+    """Round-trip the LLR plane through the precision's grid (see
+    :func:`repro.kernels.quant.fake_quant_llr`).  Appended after receivers
+    that emit LLRs directly (DeepRx) so the decoder sees the same int8
+    grid a quantized demapper would hand it.  Pure elementwise PE work;
+    the grid never leaves L1, so no extra DMA is charged."""
+    p = quant.resolve_precision(precision)
+
+    def apply(state):
+        state["llr"] = quant.fake_quant_llr(state["llr"], p)
+        return state
+
+    return RxStage(f"llr_quant@{p}", "PE", apply, None)
 
 
 # -- neural stages ----------------------------------------------------------
@@ -552,8 +588,13 @@ def cevit_che_stage(cfg: ofdm.GridConfig, params,
 # Pipeline builders — the three receivers behind one API
 # ---------------------------------------------------------------------------
 
+def _precision_tag(precision: str) -> str:
+    return f"@{precision}" if quant.is_quantized(precision) else ""
+
+
 def build_classical(scenario: LinkScenario, *, mmse_smooth: bool = True,
-                    fused: bool = False, **_) -> ReceiverPipeline:
+                    fused: bool = False, precision: Optional[str] = None,
+                    **_) -> ReceiverPipeline:
     """CFFT -> LS CHE [-> Wiener CHE] -> MIMO-MMSE detect -> LLR demod
     [-> CRC+LDPC decode].
 
@@ -562,27 +603,41 @@ def build_classical(scenario: LinkScenario, *, mmse_smooth: bool = True,
     detect+demap as one pass (Pallas on TPU, the same fused math as one
     XLA-fused function elsewhere).  Coded scenarios terminate in the
     decoder (bits out, BLER-scored) instead of raw LLRs.
+
+    ``precision="int8"|"fp8"`` serves the LLR plane on the quantized grid
+    and runs the int8 layered min-sum decoder; the pipeline's energy
+    report prices the datapath at that precision.
     """
+    p = quant.resolve_precision(precision)
     cfg, modem = scenario.grid, scenario.modem
     stages = [cfft_stage(cfg), ls_che_stage(cfg, fused=fused)]
     if mmse_smooth:
         stages.append(mmse_che_stage(cfg))
     if fused:
-        stages.append(detect_stage(cfg, fused=True, modem=modem))
+        stages.append(detect_stage(cfg, fused=True, modem=modem,
+                                   precision=p))
     else:
-        stages += [detect_stage(cfg), demod_stage(cfg, modem)]
+        stages += [detect_stage(cfg), demod_stage(cfg, modem, precision=p)]
     if scenario.code is not None:
-        stages.append(decode_stage(scenario))
+        stages.append(decode_stage(scenario, precision=p))
     tag = "+fused" if fused else ""
     return ReceiverPipeline(
-        f"classical{tag}/{scenario.name}", stages, scenario
+        f"classical{tag}{_precision_tag(p)}/{scenario.name}",
+        stages, scenario, precision=p,
     )
 
 
 def build_deeprx(scenario: LinkScenario, *, params=None, channels: int = 32,
                  blocks: int = 2, fused: bool = True,
-                 seed: int = 0, **_) -> ReceiverPipeline:
-    """CFFT -> LS CHE -> DeepRx conv receiver (grid features -> LLRs)."""
+                 seed: int = 0, precision: Optional[str] = None,
+                 **_) -> ReceiverPipeline:
+    """CFFT -> LS CHE -> DeepRx conv receiver (grid features -> LLRs).
+
+    Quantized precisions fake-quant the network's output LLR plane onto
+    the int8 grid (the conv body stays at its trained precision; the
+    decoder and energy model see the quantized datapath).
+    """
+    p = quant.resolve_precision(precision)
     cfg, modem = scenario.grid, scenario.modem
     dcfg = models.DeepRxConfig(
         channels=channels, blocks=blocks,
@@ -595,23 +650,28 @@ def build_deeprx(scenario: LinkScenario, *, params=None, channels: int = 32,
         cfft_stage(cfg), ls_che_stage(cfg),
         deeprx_stage(cfg, modem, params, dcfg, fused=fused),
     ]
+    if quant.is_quantized(p):
+        stages.append(llr_quant_stage(p))
     if scenario.code is not None:
-        stages.append(decode_stage(scenario))
+        stages.append(decode_stage(scenario, precision=p))
     return ReceiverPipeline(
-        f"deeprx/{scenario.name}", stages, scenario, params=params
+        f"deeprx{_precision_tag(p)}/{scenario.name}", stages, scenario,
+        params=params, precision=p,
     )
 
 
 def build_cevit(scenario: LinkScenario, *, params=None, d_model: int = 64,
                 heads: int = 4, layers: int = 2, d_ff: int = 128,
                 patch: int = 4, fused: bool = True, fused_rx: bool = False,
-                seed: int = 0, **_) -> ReceiverPipeline:
+                seed: int = 0, precision: Optional[str] = None,
+                **_) -> ReceiverPipeline:
     """CFFT -> LS CHE -> CE-ViT CHE -> MIMO-MMSE detect -> LLR demod.
 
     ``fused`` routes the neural CHE through the Pallas model kernels;
     ``fused_rx`` additionally serves the classical detect+demap tail
     through the fused receiver kernel.
     """
+    p = quant.resolve_precision(precision)
     cfg, modem = scenario.grid, scenario.modem
     mcfg = models.CEViTConfig(
         d_model=d_model, heads=heads, layers=layers, d_ff=d_ff, patch=patch
@@ -623,13 +683,15 @@ def build_cevit(scenario: LinkScenario, *, params=None, d_model: int = 64,
         cevit_che_stage(cfg, params, mcfg, fused=fused),
     ]
     if fused_rx:
-        stages.append(detect_stage(cfg, fused=True, modem=modem))
+        stages.append(detect_stage(cfg, fused=True, modem=modem,
+                                   precision=p))
     else:
-        stages += [detect_stage(cfg), demod_stage(cfg, modem)]
+        stages += [detect_stage(cfg), demod_stage(cfg, modem, precision=p)]
     if scenario.code is not None:
-        stages.append(decode_stage(scenario))
+        stages.append(decode_stage(scenario, precision=p))
     return ReceiverPipeline(
-        f"cevit/{scenario.name}", stages, scenario, params=params
+        f"cevit{_precision_tag(p)}/{scenario.name}", stages, scenario,
+        params=params, precision=p,
     )
 
 

@@ -144,6 +144,10 @@ class MeshServeReport:
     # coded-link aggregates (None when no cell carries a channel code)
     bler: Optional[float] = None
     info_bits_per_sec: Optional[float] = None
+    # modeled energy aggregated over the cells (total ops / total joules;
+    # slot-weighted L1 residency) — per-cell figures live in ``cells``
+    gops_per_watt: Optional[float] = None
+    l1_residency: Optional[float] = None
 
     def summary(self) -> str:
         parts = [
@@ -166,6 +170,8 @@ class MeshServeReport:
         parts.append(
             f"TTI util={self.tti_utilization:.3f} (fits={self.fits_tti})"
         )
+        if self.gops_per_watt is not None:
+            parts.append(f"{self.gops_per_watt:.0f} GOPS/W")
         if self.n_padded or self.n_stolen:
             parts.append(
                 f"padded={self.n_padded} stolen_lanes={self.n_stolen}"
@@ -433,6 +439,17 @@ class CellMeshEngine:
             good_bits += coding.goodput_bits(
                 c.scenario, rep.bler, rep.n_slots
             )
+        # energy-weighted efficiency = total modeled ops / total joules
+        e_pairs = [
+            (r.gops_per_watt, r.n_slots * r.energy_uj_per_slot)
+            for r in cells.values()
+            if r.gops_per_watt is not None and r.energy_uj_per_slot
+            and r.n_slots
+        ]
+        tot_j = sum(j for _, j in e_pairs)
+        gops_w = (
+            sum(g * j for g, j in e_pairs) / tot_j if tot_j else None
+        )
         return MeshServeReport(
             n_cells=len(self.cells),
             n_groups=len(self.groups),
@@ -453,4 +470,6 @@ class CellMeshEngine:
             bler=slot_mean("bler"),
             info_bits_per_sec=(good_bits / max(wall, 1e-9)
                                if any_coded else None),
+            gops_per_watt=gops_w,
+            l1_residency=slot_mean("l1_residency"),
         )

@@ -90,6 +90,13 @@ class PhyServeReport:
     bler: Optional[float] = None
     info_bits_per_sec: Optional[float] = None
     decode_iters: Optional[float] = None
+    # modeled energy at the pipeline's precision policy (costmodel):
+    # per-slot joules over the TensorPool cycle budget, the resulting
+    # efficiency, and how much operand traffic stayed in L1
+    precision: str = "fp32"
+    energy_uj_per_slot: Optional[float] = None
+    gops_per_watt: Optional[float] = None
+    l1_residency: Optional[float] = None
 
     def summary(self) -> str:
         parts = [
@@ -113,6 +120,11 @@ class PhyServeReport:
         if util is not None:
             parts.append(
                 f"TTI util={util:.3f} (fits={self.tti.get('fits_tti')})"
+            )
+        if self.gops_per_watt is not None:
+            parts.append(
+                f"{self.precision}: {self.gops_per_watt:.0f} GOPS/W "
+                f"(L1 res={self.l1_residency:.2f})"
             )
         return "  ".join(parts)
 
@@ -191,6 +203,14 @@ def build_serve_report(pipeline: _link.ReceiverPipeline, scenario,
         goodput = coding.goodput_bits(
             scenario, means["bler"], n_slots
         ) / wall_safe
+    # modeled per-slot energy at the pipeline's precision (skipped for
+    # pipelines whose stages carry no cycle estimators)
+    energy = gops_w = l1_res = None
+    if pipeline.stage_cycles():
+        er = pipeline.energy_report()
+        energy = er.total_j * 1e6
+        gops_w = er.gops_per_watt
+        l1_res = er.l1_residency
     return PhyServeReport(
         pipeline=pipeline.name,
         scenario=scenario.name,
@@ -206,6 +226,10 @@ def build_serve_report(pipeline: _link.ReceiverPipeline, scenario,
         bler=means["bler"],
         info_bits_per_sec=goodput,
         decode_iters=means["decode_iters"],
+        precision=pipeline.precision,
+        energy_uj_per_slot=energy,
+        gops_per_watt=gops_w,
+        l1_residency=l1_res,
     )
 
 
@@ -348,6 +372,11 @@ class ClosedLoopReport:
     mcs_occupancy: dict  # rung scenario name -> fraction of served slots
     backlog_left: int
     harq_open: int  # HARQ buffers still allocated at the end of the run
+    # modeled energy, occupancy-weighted over the rung pipelines
+    precision: str = "fp32"
+    energy_uj_per_slot: Optional[float] = None
+    gops_per_watt: Optional[float] = None
+    l1_residency: Optional[float] = None
 
     def summary(self) -> str:
         parts = [
@@ -363,6 +392,10 @@ class ClosedLoopReport:
         if self.mean_harq_rounds is not None:
             parts.append(f"rounds={self.mean_harq_rounds:.2f}")
         parts.append(f"goodput={self.goodput_bits_per_sec/1e6:.2f} Mbit/s")
+        if self.gops_per_watt is not None:
+            parts.append(
+                f"{self.precision}: {self.gops_per_watt:.0f} GOPS/W"
+            )
         occ = " ".join(
             f"{name}:{frac:.2f}"
             for name, frac in sorted(self.mcs_occupancy.items())
@@ -665,6 +698,26 @@ class SlotScheduler:
             d * s.code.k_info for d, s in zip(self._delivered, self.rungs)
         )
         total_occ = max(sum(self._occupancy), 1)
+        # occupancy-weighted energy over the rung pipelines: total modeled
+        # joules across every served slot / total ops, at each rung's
+        # per-slot EnergyReport
+        energy = gops_w = l1_res = None
+        rung_reps = [
+            (n, r.pipeline.energy_report())
+            for n, r in zip(self._occupancy, self.runners)
+            if n > 0 and r.pipeline.stage_cycles()
+        ]
+        if rung_reps:
+            tot_j = sum(n * er.total_j for n, er in rung_reps)
+            tot_ops = sum(n * er.ops for n, er in rung_reps)
+            tot_l1 = sum(n * er.l1_bytes for n, er in rung_reps)
+            tot_dma = sum(n * er.dma_bytes for n, er in rung_reps)
+            n_slots = sum(n for n, _ in rung_reps)
+            energy = tot_j / n_slots * 1e6
+            gops_w = tot_ops / tot_j * 1e-9 if tot_j > 0 else 0.0
+            l1_res = (
+                tot_l1 / (tot_l1 + tot_dma) if tot_l1 + tot_dma else 0.0
+            )
         return ClosedLoopReport(
             ladder=self.ladder_name,
             receiver=self.receiver,
@@ -702,4 +755,8 @@ class SlotScheduler:
             },
             backlog_left=sum(len(u.backlog) for u in self.users),
             harq_open=self.harq_open,
+            precision=self.runners[0].pipeline.precision,
+            energy_uj_per_slot=energy,
+            gops_per_watt=gops_w,
+            l1_residency=l1_res,
         )

@@ -1,0 +1,165 @@
+"""Per-dtype energy model: calibration, monotonicity, the hloparse
+cross-check, and GOPS/W plumbing through all three serve reports."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import costmodel, roofline
+from repro.analysis.hloparse import profile_hlo
+from repro.phy import build_pipeline, ofdm
+from repro.phy.scenarios import get_scenario
+from repro.serve import PhyServeEngine
+from repro.serve.cell_mesh import CellMeshEngine, cell
+from repro.serve.runtime import SlotScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+_SMALL = dict(n_subcarriers=64, fft_size=64, n_taps=4, delay_spread=1.0)
+
+
+def _small(name):
+    scn = get_scenario(name)
+    return scn.replace(grid=dataclasses.replace(scn.grid, **_SMALL))
+
+
+# -- calibration ------------------------------------------------------------
+
+def test_calibration_point_hits_paper_envelope():
+    """Full-rate fp16 operation lands on the paper's 4.3 W / ~8.4 TFLOPS
+    operating point (~1950 GFLOPS/W)."""
+    er = costmodel.calibration_point()
+    assert er.precision == "fp16"
+    assert 4.0 <= er.avg_power_w <= 4.6, er.avg_power_w
+    assert 1700.0 <= er.gops_per_watt <= 2200.0, er.gops_per_watt
+    assert 0.5 <= er.l1_residency <= 0.9
+
+
+def test_energy_report_terms_sum():
+    er = costmodel.calibration_point()
+    total = er.te_j + er.pe_j + er.l1_j + er.dma_j + er.static_j
+    assert total == pytest.approx(er.total_j, rel=1e-9)
+    assert er.dynamic_j == pytest.approx(total - er.static_j, rel=1e-9)
+
+
+# -- per-precision monotonicity --------------------------------------------
+
+def test_pipeline_energy_monotone_in_precision():
+    pipe = build_pipeline("classical", _small("siso-qam16-snr12"))
+    j = {
+        p: costmodel.pipeline_energy(pipe, precision=p).total_j
+        for p in ("fp32", "fp16", "int8", "fp8")
+    }
+    # fp8 and int8 differ only via pJ/MAC (0.14 vs 0.15) -> use <=
+    assert j["fp8"] <= j["int8"] < j["fp16"] < j["fp32"]
+
+
+def test_block_energy_prices_dma_by_itemsize():
+    from repro.core import pool
+
+    cyc = pool.BlockCycles(te_cycles=1e6, pe_cycles=0.0, dma_cycles=1e6)
+    e8 = costmodel.block_energy(cyc, precision="int8")
+    e32 = costmodel.block_energy(cyc, precision="fp32")
+    assert e8.dma_bytes < e32.dma_bytes
+    assert e8.macs == e32.macs  # same cycle count, same modeled MACs
+
+
+def test_roofline_step_energy_monotone():
+    flops, hbm, step = 1e12, 1e9, 1e-3
+    js = [roofline.step_energy_j(flops, hbm, step, p)
+          for p in ("fp8", "int8", "bf16", "fp32")]
+    assert js[0] <= js[1] < js[2] < js[3]
+    assert js[0] > costmodel.STATIC_W * step  # static floor included
+
+
+# -- cross-check vs the compiled artifact -----------------------------------
+
+def test_modeled_macs_match_hloparse_flops():
+    """The cycle model's inverted MAC count agrees with the compiled
+    HLO's dot/conv FLOPs on a TE-dominated (conv) pipeline."""
+    scn = _small("siso-qam16-snr12")
+    pipe = build_pipeline("deeprx", scn)
+    slot = scn.make_batch(KEY, 1)
+    prof = profile_hlo(jax.jit(pipe._apply).lower(slot).compile().as_text())
+    modeled = 2.0 * pipe.energy_report().macs
+    assert prof.flops > 0 and modeled > 0
+    ratio = prof.flops / modeled
+    assert 0.5 <= ratio <= 2.0, ratio
+
+
+# -- report plumbing --------------------------------------------------------
+
+def test_phy_serve_report_carries_energy():
+    scn = _small("siso-qam16-snr12")
+    eng = PhyServeEngine(
+        build_pipeline("classical", scn, precision="int8"), batch_size=2
+    )
+    eng.submit_traffic(KEY, 2)
+    rep = eng.run()
+    assert rep.precision == "int8"
+    assert rep.gops_per_watt is not None and rep.gops_per_watt > 0
+    assert rep.l1_residency is not None and 0.0 < rep.l1_residency < 1.0
+    assert rep.energy_uj_per_slot is not None and rep.energy_uj_per_slot > 0
+    assert "GOPS/W" in rep.summary()
+
+
+def test_quantized_report_beats_fp32_efficiency():
+    scn = _small("siso-qam16-snr12")
+    reps = {}
+    for p in (None, "int8"):
+        eng = PhyServeEngine(
+            build_pipeline("classical", scn, precision=p), batch_size=2
+        )
+        eng.submit_traffic(KEY, 2)
+        reps[p] = eng.run()
+    assert (reps["int8"].gops_per_watt > reps[None].gops_per_watt)
+    assert (reps["int8"].energy_uj_per_slot
+            < reps[None].energy_uj_per_slot)
+
+
+def test_mesh_report_carries_energy():
+    scn = _small("siso-qam16-snr12")
+    eng = CellMeshEngine(
+        [cell("c0", scn, precision="int8"),
+         cell("c1", scn, precision="int8")],
+        batch_size=2,
+    )
+    eng.submit_traffic(KEY, 2)
+    rep = eng.run()
+    assert rep.gops_per_watt is not None and rep.gops_per_watt > 0
+    assert rep.l1_residency is not None and 0.0 < rep.l1_residency < 1.0
+    for cr in rep.cells.values():
+        assert cr.gops_per_watt is not None and cr.precision == "int8"
+
+
+def test_closed_loop_report_carries_energy():
+    sched = SlotScheduler(
+        get_scenario("siso-qpsk-r12-snr8"), n_users=2, batch_size=2,
+        options={"precision": "int8"}, arrival_rate=0.0, seed=0,
+    )
+    sched.inject_backlog(1)
+    rep = sched.run(2)
+    assert rep.precision == "int8"
+    assert rep.gops_per_watt is not None and rep.gops_per_watt > 0
+    assert rep.l1_residency is not None and 0.0 < rep.l1_residency < 1.0
+    assert "GOPS/W" in rep.summary()
+
+
+def test_roofline_report_carries_energy():
+    def f(w, x):
+        return jnp.tanh(x @ w).sum()
+
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    c = jax.jit(f).lower(w, x).compile()
+    prof = profile_hlo(c.as_text())
+    from repro.core.machine import TPU_V5E
+
+    rep = roofline.build_report(
+        "toy", "1x1", 1, prof, model_flops_global=prof.flops,
+        machine=TPU_V5E, precision="bf16",
+    )
+    assert rep.energy_j > 0 and rep.gops_per_watt > 0
+    assert rep.precision == "bf16"
+    assert rep.to_json()["gops_per_watt"] == rep.gops_per_watt
