@@ -17,6 +17,7 @@ module directly to refresh its ``experiments/phy/*.json``):
   coding    — LDPC decode + coded-link BLER waterfalls       (beyond-paper)
   harq      — closed-loop HARQ/adaptive-MCS serving          (beyond-paper)
   precision — int8/fp8 kernel paths + modeled GOPS/W         (beyond-paper)
+  mesh_cl   — mesh-scale closed loop: cells x users x skew   (beyond-paper)
 
 ``--snapshot`` instead serves one coded waterfall scenario at fp32 /
 int8 / fp8 through ``PhyServeEngine`` and *appends* the result to the
@@ -80,7 +81,28 @@ def snapshot_rows() -> list:
             "l1_residency": round(rep.l1_residency, 3),
         })
         print(f"snapshot {rep.pipeline}: {rows[-1]}")
+    rows.append(mesh_closed_row())
+    print(f"snapshot {rows[-1]['pipeline']}: {rows[-1]}")
     return rows
+
+
+def mesh_closed_row() -> dict:
+    """Mesh-scale closed-loop serving point for the cross-PR trajectory:
+    8 cells, HARQ max-retx 2, below the operating point."""
+    from benchmarks import bench_mesh_closed_loop as mcl
+
+    sch = mcl._scheduler(8, 2, "uniform", 2)
+    rep = sch.run(4)
+    return {
+        "pipeline": "mesh-closed-8c",
+        "precision": rep.precision,
+        "slots_per_sec": round(rep.slots_per_sec, 1),
+        "bler": round(rep.residual_bler, 4)
+        if rep.residual_bler is not None else None,
+        "goodput_mbps": round(rep.goodput_bits_per_sec / 1e6, 2),
+        "gops_per_watt": round(rep.gops_per_watt, 1),
+        "l1_residency": round(rep.l1_residency, 3),
+    }
 
 
 def append_snapshot(path: str = BENCH_PATH) -> dict:
@@ -111,6 +133,7 @@ def run_sections() -> None:
         bench_concurrent,
         bench_gemm,
         bench_harq_serve,
+        bench_mesh_closed_loop,
         bench_parallel_gemm,
         bench_pe_kernels,
         bench_phy_e2e,
@@ -134,6 +157,7 @@ def run_sections() -> None:
         ("coding", bench_coding),
         ("harq", bench_harq_serve),
         ("precision", bench_precision),
+        ("mesh_cl", bench_mesh_closed_loop),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -10,6 +10,9 @@ Sources -> targets:
                                      tables)
   experiments/phy/precision.json  -> docs/EXPERIMENTS.md  (int8/fp8 parity +
                                      GOPS/W tables)
+  experiments/phy/mesh_closed_loop.json
+                                  -> docs/EXPERIMENTS.md  (mesh-scale
+                                     closed-loop sweep)
   repro.phy.scenarios registry    -> docs/SCENARIOS.md    (scenario table)
   repro.phy.scenarios ladders     -> docs/SERVING.md      (MCS-ladder table)
   experiments/dryrun/*.json       -> EXPERIMENTS.md       (legacy LM tables,
@@ -37,6 +40,7 @@ PHY_MULTICELL = "experiments/phy/multicell.json"
 PHY_CODING = "experiments/phy/coding.json"
 PHY_HARQ = "experiments/phy/harq.json"
 PHY_PRECISION = "experiments/phy/precision.json"
+PHY_MESH_CL = "experiments/phy/mesh_closed_loop.json"
 
 
 def load_dryrun(d):
@@ -377,6 +381,32 @@ def precision_e2e_table(data):
     return "\n".join(rows)
 
 
+# -- mesh-scale closed-loop table (docs/EXPERIMENTS.md) ---------------------
+
+def mesh_closed_loop_table(data):
+    """Cells × users × skew sweep of the mesh-scale closed loop."""
+    rows = [
+        "| cells | users/cell | skew | max retx | slots | slots/s | 1st-tx BLER | residual BLER | miss rate | handovers | shed | goodput kbit/TTI | filler lanes |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    prev = None
+    for p in data["sweep"]:
+        cfg = (p["cells"], p["users_per_cell"], p["skew"])
+        first = cfg != prev
+        prev = cfg
+        rows.append(
+            f"| {p['cells'] if first else ''} | "
+            f"{p['users_per_cell'] if first else ''} | "
+            f"{p['skew'] if first else ''} | {p['max_retx']} | "
+            f"{p['n_slots']} | {p['slots_per_sec']} | "
+            f"{_opt(p['first_tx_bler'])} | {_opt(p['residual_bler'])} | "
+            f"{p['deadline_miss_rate']:.4f} | {p['handovers']} | "
+            f"{p['jobs_shed']} | {p['goodput_kbits_per_tti']} | "
+            f"{p['filler_lane_frac']:.1%} |"
+        )
+    return "\n".join(rows)
+
+
 # -- scenario catalogue (docs/SCENARIOS.md) ---------------------------------
 
 def scenario_table():
@@ -489,6 +519,12 @@ def targets():
                 ("precision-micro-table", precision_micro_table(pr)),
                 ("precision-link-table", precision_link_table(pr)),
                 ("precision-e2e-table", precision_e2e_table(pr)),
+            ]
+        if os.path.exists(PHY_MESH_CL):
+            with open(PHY_MESH_CL) as f:
+                mcl = json.load(f)
+            sections += [
+                ("mesh-closed-loop-table", mesh_closed_loop_table(mcl)),
             ]
         if sections:
             out.append(("docs/EXPERIMENTS.md",

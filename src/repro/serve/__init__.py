@@ -1,15 +1,19 @@
 """Serving engines: LM request batching (:class:`ServeEngine`), single-cell
 PHY slot serving (:class:`PhyServeEngine`), multi-cell sharded PHY serving
 over a (cell, batch) device mesh (:class:`CellMeshEngine`), and the
-closed-loop TTI runtime with HARQ + link adaptation
-(:class:`SlotScheduler`).  The PHY paths share one slot-scheduler core
-(:mod:`repro.serve.runtime`)."""
+closed-loop TTI runtime with HARQ + link adaptation — single cell
+(:class:`SlotScheduler`) and mesh scale (:class:`MeshSlotScheduler`).
+The PHY paths share one slot-scheduler core (:mod:`repro.serve.runtime`),
+and the closed-loop paths share one per-cell state machine
+(:class:`CellLoop`)."""
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.runtime import (
-    BatchRunner, ClosedLoopReport, PhyServeReport, SlotLedger, SlotRequest,
-    SlotScheduler, build_serve_report, slot_metric_means, stack_slots,
+    BatchRunner, CellLoop, ClosedLoopReport, JobCounter, PhyServeReport,
+    SlotLedger, SlotRequest, SlotScheduler, build_serve_report, cell_rng,
+    make_traffic, rng_key, slot_metric_means, stack_slots,
 )
 from repro.serve.phy_engine import PhyServeEngine
 from repro.serve.cell_mesh import (
-    CellMeshEngine, CellSpec, MeshServeReport, cell,
+    CellMeshEngine, CellSpec, ClosedCellSpec, MeshClosedLoopReport,
+    MeshServeReport, MeshSlotScheduler, cell, closed_cell,
 )

@@ -32,6 +32,24 @@ Execution model
   ``balance="pad"`` keeps one lane per cell and pads short lanes.
   Stealing is lane-granular because a lane shares one scalar
   ``noise_var`` — slots from different-SNR cells cannot mix in a lane.
+
+Two frontends share this execution model:
+
+* :class:`CellMeshEngine` — open loop: drain pre-submitted slot queues,
+  one-shot, no feedback.
+* :class:`MeshSlotScheduler` — closed loop at mesh scale: hundreds of
+  logical cells advance in TTI lockstep, each owning a
+  :class:`repro.serve.runtime.CellLoop` (per-cell HARQ buffer pools with
+  combined-LLR state, OLLA link adaptation, Poisson arrivals).  Every
+  tick, all cells' planned (MCS, RV) batches are bucketed per shape
+  group and rung into fixed lane counts, staged host->device with the
+  combining-LLR priors riding along as donated buffers, executed as
+  sharded ``jit(vmap(pipeline._apply))`` steps, and the CRC results fan
+  back out to each cell's HARQ feedback.  When a cell's pool capacity
+  saturates its deadline budget, queued users hand over to the
+  least-loaded sibling cell of the same ladder group — and when no
+  sibling has headroom, not-yet-started jobs are shed from the queue
+  tails (HARQ-active jobs always finalize through feedback).
 """
 from __future__ import annotations
 
@@ -48,8 +66,9 @@ from repro.launch.mesh import make_cell_mesh
 from repro.phy import link as _link
 from repro.phy.scenarios import LinkScenario, get_scenario
 from repro.serve.runtime import (
-    BATCHED_KEYS, PhyServeReport, SlotLedger, SlotRequest, TTI_S,
-    build_serve_report, make_traffic, stack_slots,
+    BATCHED_KEYS, CellLoop, ClosedLoopReport, JobCounter, PhyServeReport,
+    SlotLedger, SlotRequest, TTI_S, TickStats, build_serve_report,
+    cell_rng, make_traffic, occupancy_energy, resolve_ladder, stack_slots,
 )
 
 
@@ -472,4 +491,508 @@ class CellMeshEngine:
                                if any_coded else None),
             gops_per_watt=gops_w,
             l1_residency=slot_mean("l1_residency"),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop serving at mesh scale
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClosedCellSpec:
+    """Static description of one closed-loop cell.
+
+    ``ladder`` is a registered MCS-ladder (or coded-scenario) name — kept
+    a string so it can take part in the hashable shape-group key.  Cells
+    sharing (ladder, receiver, options) form one ladder group: they share
+    the per-rung pipelines and compiled mesh steps, and handover/load
+    shedding moves users between them.
+    """
+    name: str
+    ladder: str
+    n_users: int = 4
+    arrival_rate: float = 1.0
+    snr_db: Optional[float] = None
+    snr_spread_db: float = 0.0
+    init_mcs: int = 0
+    receiver: str = "classical"
+    options: tuple = ()
+
+
+def closed_cell(name: str, ladder: str, receiver: str = "classical",
+                *, n_users: int = 4, arrival_rate: float = 1.0,
+                snr_db: Optional[float] = None, snr_spread_db: float = 0.0,
+                init_mcs: int = 0, **options) -> ClosedCellSpec:
+    """Convenience constructor mirroring :func:`cell` for closed loops."""
+    return ClosedCellSpec(
+        name, ladder, n_users=n_users, arrival_rate=arrival_rate,
+        snr_db=snr_db, snr_spread_db=snr_spread_db, init_mcs=init_mcs,
+        receiver=receiver, options=tuple(sorted(options.items())),
+    )
+
+
+@dataclasses.dataclass
+class _ClosedLane:
+    """One mesh lane of one closed-loop step: one cell's planned batch."""
+    cell_idx: Optional[int]  # None = filler lane (results discarded)
+    pairs: list = dataclasses.field(default_factory=list)  # (user, job)
+    slots: list = dataclasses.field(default_factory=list)
+    pad: int = 0
+
+
+class _LadderGroup:
+    """Cells sharing one MCS ladder + receiver: per-rung pipelines and
+    per-rung compiled ``jit(vmap(...))`` steps (same shapes)."""
+
+    def __init__(self, ladder_name: str, rungs, receiver: str,
+                 options: dict, cell_idxs: list[int], donate: bool):
+        self.ladder_name = ladder_name
+        self.rungs = rungs
+        self.receiver = receiver
+        self.cell_idxs = cell_idxs
+        self.pipelines = [
+            _link.build_pipeline(receiver, s, **options) for s in rungs
+        ]
+        # the staged batch (arg 0) carries the combining-LLR priors; on
+        # accelerator backends it is donated so XLA may fold the
+        # prior+derate accumulation into the staging buffer in place
+        # (donation is a no-op warning on cpu, so gate it)
+        jit_kw = {"donate_argnums": 0} if donate else {}
+        self.steps = [
+            jax.jit(jax.vmap(p._apply), **jit_kw) for p in self.pipelines
+        ]
+
+
+@dataclasses.dataclass
+class MeshClosedLoopReport:
+    """Aggregate + per-cell report of a mesh-scale closed-loop run.
+
+    ``cells`` maps cell name to a
+    :class:`~repro.serve.runtime.ClosedLoopReport` directly comparable to
+    a single-cell :class:`~repro.serve.runtime.SlotScheduler` run of the
+    same seeded traffic (per-cell wall time is the shared mesh wall: all
+    cells ride the same compiled steps).
+    """
+    n_cells: int
+    n_groups: int
+    mesh_shape: tuple
+    batch_size: int
+    n_users: int
+    n_ticks: int
+    max_retx: int
+    n_slots: int
+    n_steps: int
+    n_filler_lanes: int
+    wall_s: float
+    slots_per_sec: float
+    n_arrivals: int
+    deadline_miss_rate: float
+    first_tx_bler: Optional[float]
+    residual_bler: Optional[float]
+    mean_harq_rounds: Optional[float]
+    blocks_delivered: int
+    blocks_lost: int
+    jobs_shed: int
+    handovers: int
+    goodput_bits_per_sec: float
+    goodput_bits_per_tti: float
+    backlog_left: int
+    harq_open: int
+    precision: str = "fp32"
+    energy_uj_per_slot: Optional[float] = None
+    gops_per_watt: Optional[float] = None
+    l1_residency: Optional[float] = None
+    cells: dict = dataclasses.field(default_factory=dict)
+
+    def summary(self) -> str:
+        parts = [
+            f"mesh-closed[{self.mesh_shape[0]}x{self.mesh_shape[1]}] "
+            f"{self.n_cells} cells/{self.n_groups} groups: "
+            f"{self.n_slots} slots / {self.n_ticks} TTIs in "
+            f"{self.wall_s:.3f}s ({self.slots_per_sec:.1f} slots/s, "
+            f"batch={self.batch_size}, {self.n_steps} steps)",
+            f"miss={self.deadline_miss_rate:.3f}",
+        ]
+        if self.first_tx_bler is not None:
+            parts.append(f"1tx-BLER={self.first_tx_bler:.4f}")
+        if self.residual_bler is not None:
+            parts.append(f"resid-BLER={self.residual_bler:.4f}")
+        parts.append(f"goodput={self.goodput_bits_per_sec/1e6:.2f} Mbit/s")
+        if self.gops_per_watt is not None:
+            parts.append(
+                f"{self.precision}: {self.gops_per_watt:.0f} GOPS/W"
+            )
+        if self.handovers or self.jobs_shed:
+            parts.append(
+                f"handovers={self.handovers} shed={self.jobs_shed}"
+            )
+        return "  ".join(parts)
+
+    def per_cell_summary(self) -> str:
+        return "\n".join(
+            f"  {name:16s} {rep.summary()}"
+            for name, rep in sorted(self.cells.items())
+        )
+
+
+class MeshSlotScheduler:
+    """TTI-lockstep closed-loop scheduler for many cells on one mesh.
+
+    The mesh-scale sibling of
+    :class:`repro.serve.runtime.SlotScheduler`: every cell owns a
+    :class:`~repro.serve.runtime.CellLoop` (the shared per-cell state
+    machine — queues, HARQ pools, OLLA), and each global tick advances
+    all of them in lockstep:
+
+    1. **arrive** — every cell draws its Poisson arrivals from its own
+       :func:`~repro.serve.runtime.cell_rng` stream (cell ``i`` of seed
+       ``s`` replays exactly as a single-cell run seeded ``(s, i)``).
+    2. **rebalance** — within each ladder group, cells whose pending
+       jobs exceed their pool capacity
+       (:meth:`~repro.serve.runtime.CellLoop.capacity_jobs`) hand whole
+       users over to the least-loaded sibling with headroom; if no
+       sibling has headroom, not-yet-started jobs are shed from queue
+       tails (HARQ-active jobs are never shed — their soft state must
+       finalize through feedback).
+    3. **plan** — each cell forms its (MCS, SNR) batches; batches bucket
+       per (ladder group, rung) into mesh lanes, padded with filler
+       lanes to a power-of-two lane count so each (group, rung) compiles
+       at most log2(lanes) step shapes.
+    4. **serve** — each bucket stages host-side (per-lane
+       :func:`stack_slots`, lane stack, ``cell_slot_shardings``,
+       ``device_put``) and runs the rung's ``jit(vmap(pipeline._apply))``
+       step; staging of bucket *k+1* overlaps device compute of bucket
+       *k*, and the staged batch (carrying the combined-LLR priors) is
+       donated on accelerator backends.
+    5. **feedback** — CRC results fan back to each lane's cell:
+       ACK/NACK, HARQ combine-buffer accumulate/free, OLLA walk.
+
+    Transport-block jobs draw ids from one shared
+    :class:`~repro.serve.runtime.JobCounter`, so conservation is
+    checkable mesh-wide even across handover: issued ids ==
+    finalized ids + queued ids, exactly once each.
+    """
+
+    def __init__(self, cells: list[ClosedCellSpec], *,
+                 batch_size: int = 4, mesh=None, max_retx: int = 2,
+                 deadline_ttis: int = 4,
+                 max_batches_per_tick: Optional[int] = None,
+                 adapt: bool = True, target_bler: float = 0.1,
+                 olla_step: float = 0.1, seed: int = 0):
+        names = [c.name for c in cells]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate cell names in {names}")
+        self.batch_size = batch_size
+        self.max_retx = max_retx
+        self.specs = list(cells)
+        self.job_counter = JobCounter()
+
+        donate = jax.default_backend() != "cpu"
+        by_key: dict[tuple, list[int]] = {}
+        for i, spec in enumerate(self.specs):
+            by_key.setdefault(
+                (spec.ladder, spec.receiver, spec.options), []
+            ).append(i)
+        self.groups: list[_LadderGroup] = []
+        self._group_of: dict[int, _LadderGroup] = {}
+        for (ladder, receiver, options), idxs in by_key.items():
+            ladder_name, rungs = resolve_ladder(ladder)
+            g = _LadderGroup(
+                ladder_name, rungs, receiver, dict(options), idxs, donate
+            )
+            self.groups.append(g)
+            for i in idxs:
+                self._group_of[i] = g
+
+        self.loops: list[CellLoop] = []
+        uid_base = 0
+        for i, spec in enumerate(self.specs):
+            g = self._group_of[i]
+            self.loops.append(CellLoop(
+                g.rungs, name=spec.name, rng=cell_rng(seed, i),
+                n_users=spec.n_users, batch_size=batch_size,
+                arrival_rate=spec.arrival_rate, max_retx=max_retx,
+                deadline_ttis=deadline_ttis,
+                max_batches_per_tick=max_batches_per_tick, adapt=adapt,
+                target_bler=target_bler, olla_step=olla_step,
+                init_mcs=spec.init_mcs, snr_db=spec.snr_db,
+                snr_spread_db=spec.snr_spread_db, uid_base=uid_base,
+                job_ids=self.job_counter,
+            ))
+            uid_base += spec.n_users
+
+        if mesh is None:
+            mesh = make_cell_mesh(len(self.specs))
+        self.mesh = mesh
+        # lane buckets must stay divisible by the mesh's cell axis
+        self._min_lanes = int(self.mesh.devices.shape[0])
+        self._warmed: set = set()
+        self.wall_s = 0.0
+        self.n_steps = 0
+        self.n_filler_lanes = 0
+        self.n_real_lanes = 0
+        self.now = 0
+
+    @classmethod
+    def uniform(cls, ladder: str, n_cells: int, *, n_users: int = 4,
+                arrival_rate: float = 1.0, snr_db: Optional[float] = None,
+                snr_spread_db: float = 0.0, init_mcs: int = 0,
+                receiver: str = "classical", hot_cells: int = 0,
+                hot_factor: float = 1.0, options: Optional[dict] = None,
+                **kw) -> "MeshSlotScheduler":
+        """N same-config cells; the first ``hot_cells`` get their arrival
+        rate multiplied by ``hot_factor`` (load-skew sweeps)."""
+        specs = [
+            closed_cell(
+                f"cell{i}", ladder, receiver, n_users=n_users,
+                arrival_rate=(arrival_rate * hot_factor if i < hot_cells
+                              else arrival_rate),
+                snr_db=snr_db, snr_spread_db=snr_spread_db,
+                init_mcs=init_mcs, **(options or {}),
+            )
+            for i in range(n_cells)
+        ]
+        return cls(specs, **kw)
+
+    # -- invariants (the test harness's observation surface) --------------
+    @property
+    def jobs_submitted(self) -> int:
+        return self.job_counter.n
+
+    def finalized_job_ids(self) -> list[int]:
+        return [j for loop in self.loops for j in loop.finalized_jobs]
+
+    def queued_job_ids(self) -> list[int]:
+        return [
+            j.job_id
+            for loop in self.loops
+            for u in loop.users
+            for j in u.backlog
+        ]
+
+    @property
+    def harq_open(self) -> int:
+        return sum(loop.harq_open for loop in self.loops)
+
+    @property
+    def backlog(self) -> int:
+        return sum(loop.backlog for loop in self.loops)
+
+    def inject_backlog(self, n_per_user: int) -> None:
+        for loop in self.loops:
+            loop.inject_backlog(n_per_user)
+
+    # -- rebalancing: inter-cell handover + load shedding -----------------
+    def _rebalance(self) -> None:
+        """Migrate users off saturated cells; shed as the last resort.
+
+        A cell saturates when its pending jobs exceed
+        :meth:`CellLoop.capacity_jobs` — the most it can serve inside the
+        deadline budget at its pool capacity (unlimited pools never
+        saturate, so this is a no-op unless ``max_batches_per_tick`` is
+        set).  Users move whole (queue + HARQ state + OLLA state) to the
+        least-loaded same-group sibling, and only when the move fits the
+        receiver's headroom — otherwise overload would just slosh.
+        """
+        for g in self.groups:
+            loops = [self.loops[i] for i in g.cell_idxs]
+            for donor in loops:
+                while donor.pending_jobs() > donor.capacity_jobs():
+                    moved = False
+                    recvs = [
+                        l for l in loops
+                        if l is not donor
+                        and l.pending_jobs() < l.capacity_jobs()
+                    ]
+                    movable = [u for u in donor.users if u.backlog]
+                    if recvs and movable and len(donor.users) > 1:
+                        recv = min(recvs, key=lambda l: l.pending_jobs())
+                        user = max(movable, key=lambda u: len(u.backlog))
+                        headroom = (recv.capacity_jobs()
+                                    - recv.pending_jobs())
+                        moved_load = len(user.backlog)
+                        # migrate when the receiver absorbs the load
+                        # inside its budget, or when the move strictly
+                        # improves balance (no overload sloshing)
+                        if moved_load <= headroom or (
+                            recv.pending_jobs() + moved_load
+                            < donor.pending_jobs()
+                        ):
+                            donor.users.remove(user)
+                            recv.users.append(user)
+                            donor.handover_out += 1
+                            recv.handover_in += 1
+                            moved = True
+                    if not moved:
+                        overflow = int(
+                            donor.pending_jobs() - donor.capacity_jobs()
+                        )
+                        donor.shed_tail(overflow)
+                        break  # HARQ-active jobs may keep it over cap
+
+    # -- staging ----------------------------------------------------------
+    def _bucket(self, n_lanes: int) -> int:
+        b = self._min_lanes
+        while b < n_lanes:
+            b *= 2
+        return b
+
+    def _stage(self, lanes: list[_ClosedLane]) -> dict:
+        """Stack one step's lanes to sharded (n_lanes, batch, ...) arrays,
+        padding with filler lanes (replaying lane 0) to the power-of-two
+        lane bucket."""
+        bucket = self._bucket(len(lanes))
+        per_lane = [
+            stack_slots(lane.slots, lane.pad, xp=np) for lane in lanes
+        ]
+        per_lane += [per_lane[0]] * (bucket - len(lanes))
+        stacked = {
+            k: np.stack([np.asarray(pl[k]) for pl in per_lane], axis=0)
+            for k in per_lane[0]
+        }
+        shardings = shd.cell_slot_shardings(
+            stacked, self.mesh, batched_keys=BATCHED_KEYS
+        )
+        return {
+            k: jax.device_put(v, shardings[k]) for k, v in stacked.items()
+        }
+
+    # -- the lockstep TTI loop --------------------------------------------
+    def tick(self) -> list[TickStats]:
+        """Advance every cell one TTI in lockstep."""
+        stats = [TickStats(tick=loop.now) for loop in self.loops]
+        for loop, st in zip(self.loops, stats):
+            loop.arrive(st)
+        self._rebalance()
+
+        # plan: every cell's batches, bucketed per (ladder group, rung)
+        work: dict[tuple, list[_ClosedLane]] = {}
+        for gi, g in enumerate(self.groups):
+            for ci in g.cell_idxs:
+                loop = self.loops[ci]
+                for mcs, pairs in loop.plan_batches():
+                    slots = [
+                        loop.make_slot(u, job, mcs) for u, job in pairs
+                    ]
+                    loop.n_batches += 1
+                    work.setdefault((gi, mcs), []).append(_ClosedLane(
+                        cell_idx=ci, pairs=pairs, slots=slots,
+                        pad=self.batch_size - len(pairs),
+                    ))
+        items = sorted(work.items())
+
+        # serve: one sharded step per bucket; staging of bucket k+1
+        # overlaps device compute of bucket k, warmups are untimed
+        if items:
+            staged = self._stage(items[0][1])
+            for i, ((gi, mcs), lanes) in enumerate(items):
+                g = self.groups[gi]
+                step = g.steps[mcs]
+                wkey = (gi, mcs, self._bucket(len(lanes)))
+                if wkey not in self._warmed:
+                    jax.block_until_ready(step(staged))
+                    self._warmed.add(wkey)
+                    # donated steps consume their staged buffers
+                    staged = self._stage(lanes)
+                t0 = time.perf_counter()
+                state = step(staged)  # async dispatch
+                staged = (self._stage(items[i + 1][1])
+                          if i + 1 < len(items) else None)
+                state = jax.block_until_ready(state)
+                self.wall_s += time.perf_counter() - t0
+                self.n_steps += 1
+                self.n_real_lanes += len(lanes)
+                self.n_filler_lanes += (
+                    self._bucket(len(lanes)) - len(lanes)
+                )
+                self._feedback(lanes, mcs, state, stats)
+
+        for loop, st in zip(self.loops, stats):
+            loop.end_tick(st)
+        self.now += 1
+        return stats
+
+    def _feedback(self, lanes: list[_ClosedLane], mcs: int, state: dict,
+                  stats: list[TickStats]) -> None:
+        crc_ok = np.asarray(state["crc_ok"])  # (L, B, C)
+        cw_llr = np.asarray(state["cw_llr"])  # (L, B, C, n_mother)
+        for li, lane in enumerate(lanes):
+            loop = self.loops[lane.cell_idx]
+            for j, (u, job) in enumerate(lane.pairs):
+                loop.serve_feedback(
+                    u, job, mcs, crc_ok[li, j].astype(bool),
+                    cw_llr[li, j : j + 1], stats[lane.cell_idx],
+                )
+
+    def run(self, n_ticks: int) -> MeshClosedLoopReport:
+        for _ in range(n_ticks):
+            self.tick()
+        return self.report()
+
+    # -- reporting --------------------------------------------------------
+    def report(self) -> MeshClosedLoopReport:
+        cells = {}
+        for i, loop in enumerate(self.loops):
+            g = self._group_of[i]
+            cells[loop.name] = loop.report(
+                ladder_name=g.ladder_name, receiver=g.receiver,
+                pipelines=g.pipelines, wall_s=self.wall_s,
+                n_batches=loop.n_batches,
+            )
+        loops = self.loops
+        wall_safe = max(self.wall_s, 1e-9)
+        served = sum(l._served for l in loops)
+        missed = sum(l._missed for l in loops)
+        ftx_blocks = sum(l._first_tx_blocks for l in loops)
+        ftx_errors = sum(l._first_tx_errors for l in loops)
+        delivered = sum(sum(l._delivered) for l in loops)
+        lost = sum(l._lost for l in loops)
+        rounds = [r for l in loops for r in l._rounds]
+        good_bits = sum(l.good_bits() for l in loops)
+        # occupancy-weighted energy over every (group, rung) pipeline
+        occ, pipes = [], []
+        for g in self.groups:
+            for r in range(len(g.rungs)):
+                occ.append(sum(
+                    self.loops[i]._occupancy[r] for i in g.cell_idxs
+                ))
+                pipes.append(g.pipelines[r])
+        energy, gops_w, l1_res = occupancy_energy(occ, pipes)
+        return MeshClosedLoopReport(
+            n_cells=len(self.loops),
+            n_groups=len(self.groups),
+            mesh_shape=tuple(self.mesh.devices.shape),
+            batch_size=self.batch_size,
+            n_users=sum(len(l.users) for l in loops),
+            n_ticks=self.now,
+            max_retx=self.max_retx,
+            n_slots=served,
+            n_steps=self.n_steps,
+            n_filler_lanes=self.n_filler_lanes,
+            wall_s=self.wall_s,
+            slots_per_sec=served / wall_safe,
+            n_arrivals=sum(l._arrivals for l in loops),
+            deadline_miss_rate=missed / served if served else 0.0,
+            first_tx_bler=(
+                ftx_errors / ftx_blocks if ftx_blocks else None
+            ),
+            residual_bler=(
+                lost / (lost + delivered) if lost + delivered else None
+            ),
+            mean_harq_rounds=(
+                float(np.mean(rounds)) if rounds else None
+            ),
+            blocks_delivered=delivered,
+            blocks_lost=lost,
+            jobs_shed=sum(l.jobs_shed for l in loops),
+            handovers=sum(l.handover_in for l in loops),
+            goodput_bits_per_sec=good_bits / wall_safe,
+            goodput_bits_per_tti=good_bits / max(self.now, 1),
+            backlog_left=self.backlog,
+            harq_open=self.harq_open,
+            precision=self.groups[0].pipelines[0].precision,
+            energy_uj_per_slot=energy,
+            gops_per_watt=gops_w,
+            l1_residency=l1_res,
+            cells=cells,
         )

@@ -8,27 +8,31 @@ closed loop:
 
 * **Shared core** — :class:`SlotRequest` / :class:`PhyServeReport`,
   submit bookkeeping (:class:`SlotLedger`), batch stacking/padding
-  (:func:`stack_slots`), traffic generation (:func:`make_traffic`),
-  slot-metric aggregation (:func:`slot_metric_means`) and report
-  construction (:func:`build_serve_report`), and the timed batch
-  executor (:class:`BatchRunner`).  The open-loop frontends
+  (:func:`stack_slots`), traffic generation (:func:`make_traffic`, with
+  single-seed reproducibility via :func:`cell_rng`), slot-metric
+  aggregation (:func:`slot_metric_means`) and report construction
+  (:func:`build_serve_report`), and the timed batch executor
+  (:class:`BatchRunner`).  The open-loop frontends
   (:class:`repro.serve.phy_engine.PhyServeEngine`,
   :class:`repro.serve.cell_mesh.CellMeshEngine`) are thin layers over
   these pieces, so single-cell, multi-cell, and closed-loop serving all
   batch, time, and score slots identically.
 
-* **Closed loop** — :class:`SlotScheduler` advances in TTI ticks: a
-  Poisson arrival process fills per-user queues, each tick serves at
-  most one slot per user (grouped by (MCS, SNR) into fixed-size batches:
-  the MCS picks the rung's single compiled executable, and the SNR must
-  be batch-uniform because ``noise_var`` is scalar side info — the same
-  constraint as a mesh lane), CRC feedback
-  ACK/NACKs each transport block, NACKed blocks requeue as HARQ
-  retransmissions at the next redundancy version with the combined
-  channel LLRs of earlier rounds riding along as the decode prior
-  (chase + incremental redundancy, :mod:`repro.phy.coding`), and
-  OLLA-style link adaptation walks each user along an
-  :class:`repro.phy.scenarios.MCSLadder`.
+* **Closed loop** — the per-cell state machine lives in
+  :class:`CellLoop`: Poisson arrivals into per-user queues, one slot per
+  user per TTI grouped by (MCS, SNR) into fixed-size batches (the MCS
+  picks the rung's single compiled executable, and the SNR must be
+  batch-uniform because ``noise_var`` is scalar side info — the same
+  constraint as a mesh lane), CRC ACK/NACK feedback, HARQ
+  retransmissions at the next redundancy version with combined channel
+  LLRs riding along as the decode prior (chase + incremental redundancy,
+  :mod:`repro.phy.coding`), and OLLA-style link adaptation over an
+  :class:`repro.phy.scenarios.MCSLadder`.  :class:`SlotScheduler` drives
+  one CellLoop through per-rung :class:`BatchRunner` executables;
+  :class:`repro.serve.cell_mesh.MeshSlotScheduler` drives hundreds of
+  CellLoops in TTI lockstep over a ``(cell, batch)`` device mesh —
+  because both frontends share the state machine, a 1-cell mesh run and
+  a single-cell run produce identical closed-loop trajectories.
 
 HARQ buffer lifecycle (the serving-level analogue of the paper's L1
 data-reuse argument): a process's combined-LLR buffer is *created* on the
@@ -36,13 +40,19 @@ first NACK, *accumulated into* by every retransmission's de-rate-matched
 window, and *freed* on delivery or max-retx exhaustion — soft state lives
 exactly as long as the block is in flight, like TensorPool keeps decoder
 state L1-resident across min-sum iterations instead of round-tripping it.
+
+Every transport-block job carries a unique ``job_id`` and ends in exactly
+one of four states — delivered, exhausted, shed, or still queued — with
+the finalized ids recorded per cell (:attr:`CellLoop.finalized_jobs`), so
+the invariant tests can assert conservation (no loss, no duplication)
+even across inter-cell handover.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -163,9 +173,41 @@ def stack_slots(slots: list, pad: int = 0, keys=BATCHED_KEYS, xp=jnp
     return batch
 
 
-def make_traffic(scenario, key: jax.Array, n: int) -> list:
-    """Simulate ``n`` independent single-slot arrivals of ``scenario``."""
-    return [scenario.make_batch(k, 1) for k in jax.random.split(key, n)]
+def cell_rng(seed: int, cell: int = 0) -> np.random.Generator:
+    """One deterministic Generator per (seed, cell index).
+
+    Every source of serving randomness — Poisson arrivals, per-user SNR
+    spread, and the jax keys behind slot/channel/noise realizations
+    (:func:`rng_key`) — draws from this single stream, so any engine
+    (single cell, mesh, closed loop) is reproducible from one ``seed=``,
+    and cell ``i`` of a mesh run replays identically as a standalone
+    single-cell run seeded with the same ``(seed, i)``.
+    """
+    return np.random.default_rng(
+        np.random.SeedSequence([int(seed), int(cell)])
+    )
+
+
+def rng_key(rng: np.random.Generator) -> jax.Array:
+    """Draw a fresh jax PRNG key from a numpy Generator stream."""
+    return jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+
+
+def make_traffic(scenario, rng, n: int) -> list:
+    """Simulate ``n`` independent single-slot arrivals of ``scenario``.
+
+    ``rng`` is a jax PRNG key (split ``n`` ways), an int seed, or a
+    :class:`numpy.random.Generator` — the latter two route through
+    :func:`cell_rng`/:func:`rng_key` so every engine draws traffic from
+    one reproducible per-seed stream instead of per-call key plumbing.
+    """
+    if isinstance(rng, (int, np.integer)):
+        rng = cell_rng(int(rng))
+    if isinstance(rng, np.random.Generator):
+        keys = [rng_key(rng) for _ in range(n)]
+    else:
+        keys = jax.random.split(rng, n)
+    return [scenario.make_batch(k, 1) for k in keys]
 
 
 def slot_metric_means(metric_dicts) -> dict:
@@ -292,7 +334,7 @@ class BatchRunner:
 
 
 # ---------------------------------------------------------------------------
-# Closed-loop TTI scheduler
+# Closed-loop TTI scheduling: the per-cell state machine
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -317,6 +359,7 @@ class HarqProcess:
 class _Job:
     """One pending transmission in a user's queue."""
     enq_tick: int  # when this attempt became schedulable
+    job_id: int = -1  # mesh-unique transport-block-job id (conservation)
     harq: Optional[HarqProcess] = None  # None until first serve
 
 
@@ -344,7 +387,7 @@ class TickStats:
 
 @dataclasses.dataclass
 class ClosedLoopReport:
-    """Aggregate report of one closed-loop serving run."""
+    """Aggregate report of one closed-loop serving run (one cell)."""
     ladder: str
     receiver: str
     n_users: int
@@ -377,6 +420,13 @@ class ClosedLoopReport:
     energy_uj_per_slot: Optional[float] = None
     gops_per_watt: Optional[float] = None
     l1_residency: Optional[float] = None
+    # inter-cell mobility (mesh runs only; zero on a single cell):
+    # users migrated in/out of this cell and new-data jobs shed when the
+    # whole ladder group was saturated
+    cell: str = ""
+    handover_in: int = 0
+    handover_out: int = 0
+    jobs_shed: int = 0
 
     def summary(self) -> str:
         parts = [
@@ -396,6 +446,11 @@ class ClosedLoopReport:
             parts.append(
                 f"{self.precision}: {self.gops_per_watt:.0f} GOPS/W"
             )
+        if self.handover_in or self.handover_out or self.jobs_shed:
+            parts.append(
+                f"ho={self.handover_in}in/{self.handover_out}out "
+                f"shed={self.jobs_shed}"
+            )
         occ = " ".join(
             f"{name}:{frac:.2f}"
             for name, frac in sorted(self.mcs_occupancy.items())
@@ -404,97 +459,136 @@ class ClosedLoopReport:
         return "  ".join(parts)
 
 
-class SlotScheduler:
-    """TTI-clocked closed-loop slot scheduler over an MCS ladder.
+class JobCounter:
+    """Monotone transport-block-job id allocator.
 
-    Parameters
-    ----------
-    ladder: an :class:`~repro.phy.scenarios.MCSLadder`, a registered
-        ladder name, or a single coded :class:`LinkScenario` (fixed MCS,
-        a one-rung ladder).
-    n_users: users in the cell; each keeps its own queue, HARQ state,
-        and link-adaptation state.
-    batch_size: slots per compiled pipeline invocation (per rung).
-    receiver / options: forwarded to the pipeline builder once per rung.
-    pipelines: prebuilt per-rung pipelines (skips building; lets sweeps
-        reuse compiled executables across scheduler instances).
-    arrival_rate: Poisson mean of new slot arrivals per user per TTI.
-    max_retx: HARQ retransmissions after the first transmission before a
-        block is declared lost and its buffer freed.
-    deadline_ttis: queue-latency budget; a served slot that waited more
-        ticks than this counts as a TTI-deadline miss.
-    max_batches_per_tick: pool capacity — compiled batches the cell can
-        run inside one TTI (None = serve every active user each tick).
-    adapt / target_bler / olla_step: OLLA link adaptation.  On ACK the
-        accumulator rises by ``olla_step``, on NACK it falls by
-        ``olla_step * (1 - target_bler) / target_bler`` (zero drift at
-        the target), and crossing +-1 walks the user one rung up/down.
-    snr_db: the users' channel SNR (defaults to the lowest rung's
-        operating point); snr_spread_db spreads users uniformly around it.
+    Shared by every :class:`CellLoop` of a mesh so job ids stay unique
+    across cells even as users migrate; ``n`` is the total issued so far,
+    making the conservation invariant enumerable: the issued ids are
+    exactly ``range(n)`` and each must end up finalized or queued.
     """
 
-    def __init__(self, ladder, *, n_users: int = 4, batch_size: int = 4,
-                 receiver: str = "classical", options: Optional[dict] = None,
-                 pipelines: Optional[list] = None,
-                 arrival_rate: float = 1.0, max_retx: int = 2,
-                 deadline_ttis: int = 4,
+    def __init__(self):
+        self.n = 0
+
+    def __next__(self) -> int:
+        i = self.n
+        self.n += 1
+        return i
+
+    def __iter__(self):
+        return self
+
+
+def resolve_ladder(ladder):
+    """Accept an MCSLadder, a registered ladder name, or a single coded
+    LinkScenario (a one-rung ladder); return ``(name, rung scenarios)``."""
+    from repro.phy.scenarios import LinkScenario, MCSLadder, get_ladder
+
+    if isinstance(ladder, str):
+        try:
+            ladder = get_ladder(ladder)
+        except KeyError:
+            from repro.phy.scenarios import get_scenario
+
+            ladder = get_scenario(ladder)
+    if isinstance(ladder, LinkScenario):
+        assert ladder.code is not None, (
+            f"{ladder.name}: the closed loop needs a channel code "
+            "(CRC ACK/NACK feedback)"
+        )
+        return ladder.name, [ladder]
+    assert isinstance(ladder, MCSLadder), ladder
+    return ladder.name, ladder.scenarios()
+
+
+def occupancy_energy(occupancy, pipelines):
+    """Occupancy-weighted modeled energy over rung pipelines.
+
+    Returns ``(energy_uj_per_slot, gops_per_watt, l1_residency)`` —
+    total modeled joules across every served slot / total ops at each
+    rung's per-slot EnergyReport — or ``(None, None, None)`` when no
+    served rung carries cycle estimators.
+    """
+    rung_reps = [
+        (n, p.energy_report())
+        for n, p in zip(occupancy, pipelines)
+        if n > 0 and p.stage_cycles()
+    ]
+    if not rung_reps:
+        return None, None, None
+    tot_j = sum(n * er.total_j for n, er in rung_reps)
+    tot_ops = sum(n * er.ops for n, er in rung_reps)
+    tot_l1 = sum(n * er.l1_bytes for n, er in rung_reps)
+    tot_dma = sum(n * er.dma_bytes for n, er in rung_reps)
+    n_slots = sum(n for n, _ in rung_reps)
+    return (
+        tot_j / n_slots * 1e6,
+        tot_ops / tot_j * 1e-9 if tot_j > 0 else 0.0,
+        tot_l1 / (tot_l1 + tot_dma) if tot_l1 + tot_dma else 0.0,
+    )
+
+
+class CellLoop:
+    """The per-cell closed-loop state machine (no execution, no jax).
+
+    Owns everything about one logical cell *except* running pipelines:
+    per-user queues and link-adaptation state, Poisson arrivals, HARQ
+    soft buffers and ACK/NACK feedback, batch planning under the pool's
+    per-TTI capacity, and the aggregate counters behind
+    :class:`ClosedLoopReport`.  :class:`SlotScheduler` drives one of
+    these through per-rung :class:`BatchRunner` executables; the mesh
+    closed loop (:class:`repro.serve.cell_mesh.MeshSlotScheduler`) drives
+    many in TTI lockstep through sharded ``jit(vmap(pipeline))`` steps.
+    Sharing the state machine is what makes a 1-cell mesh run and a
+    single-cell run bit-identical on the same seed.
+
+    All randomness — arrivals, SNR spread, and the jax keys behind slot
+    generation — draws from the single ``rng`` stream (:func:`cell_rng`),
+    so a cell's whole trajectory is reproducible from ``(seed, cell)``.
+    """
+
+    def __init__(self, rungs, *, name: str = "cell0",
+                 rng: np.random.Generator, n_users: int = 4,
+                 batch_size: int = 4, arrival_rate: float = 1.0,
+                 max_retx: int = 2, deadline_ttis: int = 4,
                  max_batches_per_tick: Optional[int] = None,
                  adapt: bool = True, target_bler: float = 0.1,
                  olla_step: float = 0.1, init_mcs: int = 0,
                  snr_db: Optional[float] = None,
-                 snr_spread_db: float = 0.0, seed: int = 0):
-        from repro.phy.scenarios import LinkScenario, MCSLadder, get_ladder
-
-        if isinstance(ladder, str):
-            ladder = get_ladder(ladder)
-        if isinstance(ladder, LinkScenario):
-            assert ladder.code is not None, (
-                f"{ladder.name}: the closed loop needs a channel code "
-                "(CRC ACK/NACK feedback)"
-            )
-            self.rungs = [ladder]
-            self.ladder_name = ladder.name
-        else:
-            assert isinstance(ladder, MCSLadder), ladder
-            self.rungs = ladder.scenarios()
-            self.ladder_name = ladder.name
-        self.receiver = receiver
+                 snr_spread_db: float = 0.0, uid_base: int = 0,
+                 job_ids=None):
+        self.name = name
+        self.rungs = list(rungs)
+        self.rng = rng
         self.batch_size = batch_size
+        self.arrival_rate = arrival_rate
         self.max_retx = max_retx
         self.deadline_ttis = deadline_ttis
         self.max_batches_per_tick = max_batches_per_tick
-        self.arrival_rate = arrival_rate
         self.adapt = adapt and len(self.rungs) > 1
         self.target_bler = target_bler
         self.olla_up = olla_step
         self.olla_down = olla_step * (1.0 - target_bler) / target_bler
-
-        if pipelines is None:
-            pipelines = [
-                _link.build_pipeline(receiver, s, **(options or {}))
-                for s in self.rungs
-            ]
-        assert len(pipelines) == len(self.rungs)
-        self.runners = [BatchRunner(p, batch_size) for p in pipelines]
-        self._warmed = [False] * len(self.runners)
+        # job ids come from a shared counter in a mesh so they are unique
+        # across cells even as users migrate
+        self._job_ids = JobCounter() if job_ids is None else job_ids
 
         init_mcs = min(init_mcs, len(self.rungs) - 1)
         base_snr = self.rungs[init_mcs].snr_db if snr_db is None else snr_db
-        self._rng = np.random.default_rng(seed)
-        self._key = jax.random.PRNGKey(seed)
         self.users = [
             UserState(
-                user_id=i,
-                snr_db=float(base_snr + self._rng.uniform(
+                user_id=uid_base + i,
+                snr_db=float(base_snr + self.rng.uniform(
                     -snr_spread_db, snr_spread_db
                 )),
                 mcs=init_mcs,
             )
             for i in range(n_users)
         ]
-        self.ledger = SlotLedger()
         self.now = 0
         self.tick_log: list[TickStats] = []
+        self.n_batches = 0  # compiled batches planned+served for this cell
         # aggregate counters
         self._arrivals = 0
         self._served = 0
@@ -505,31 +599,38 @@ class SlotScheduler:
         self._lost = 0
         self._rounds: list[int] = []  # per finalized process
         self._occupancy = [0] * len(self.rungs)  # served slots per rung
+        # conservation bookkeeping: every job id ends in exactly one of
+        # finalized (delivered / exhausted / shed) or some cell's backlog
+        self.finalized_jobs: list[int] = []
+        self.handover_in = 0
+        self.handover_out = 0
+        self.jobs_shed = 0
 
     # -- traffic ----------------------------------------------------------
-    def _next_key(self) -> jax.Array:
-        self._key, k = jax.random.split(self._key)
-        return k
+    def next_key(self) -> jax.Array:
+        return rng_key(self.rng)
+
+    def _new_job(self) -> _Job:
+        self._arrivals += 1
+        return _Job(enq_tick=self.now, job_id=next(self._job_ids))
 
     def inject_backlog(self, n_per_user: int) -> None:
         """Enqueue ``n_per_user`` new-data jobs for every user at the
         current tick (deterministic traffic for tests/benchmarks)."""
         for u in self.users:
             for _ in range(n_per_user):
-                u.backlog.append(_Job(enq_tick=self.now))
-                self._arrivals += 1
+                u.backlog.append(self._new_job())
 
-    def _arrive(self, stats: TickStats) -> None:
+    def arrive(self, stats: TickStats) -> None:
         if self.arrival_rate <= 0:
             return
         for u in self.users:
-            for _ in range(int(self._rng.poisson(self.arrival_rate))):
-                u.backlog.append(_Job(enq_tick=self.now))
+            for _ in range(int(self.rng.poisson(self.arrival_rate))):
+                u.backlog.append(self._new_job())
                 stats.n_arrivals += 1
-                self._arrivals += 1
 
     # -- slot construction ------------------------------------------------
-    def _make_slot(self, user: UserState, job: _Job, mcs: int) -> dict:
+    def make_slot(self, user: UserState, job: _Job, mcs: int) -> dict:
         """Build the (re)transmission slot for one job.
 
         New data draws fresh transport blocks at the planned MCS (the
@@ -544,7 +645,7 @@ class SlotScheduler:
             scn = self.rungs[mcs]
             n_cw = coding.codewords_per_slot(scn)
             slot = coding.make_coded_slot(
-                self._next_key(), scn.replace(snr_db=user.snr_db), 1, rv=0
+                self.next_key(), scn.replace(snr_db=user.snr_db), 1, rv=0
             )
             job.harq = HarqProcess(
                 mcs=mcs,
@@ -558,13 +659,25 @@ class SlotScheduler:
             h = job.harq
             scn = self.rungs[h.mcs]  # retx pins the MCS of the first tx
             slot = coding.make_coded_slot(
-                self._next_key(), scn.replace(snr_db=user.snr_db), 1,
+                self.next_key(), scn.replace(snr_db=user.snr_db), 1,
                 rv=h.rv, info=h.info,
             )
         slot["prior_llr"] = job.harq.prior
         return slot
 
     # -- feedback ---------------------------------------------------------
+    def serve_feedback(self, user: UserState, job: _Job, mcs: int,
+                       crc_ok: np.ndarray, cw_llr: np.ndarray,
+                       stats: TickStats) -> None:
+        """Record one served slot and ACK/NACK its transport blocks."""
+        self._occupancy[mcs] += 1
+        self._served += 1
+        stats.n_served += 1
+        if self.now - job.enq_tick > self.deadline_ttis:
+            self._missed += 1
+            stats.n_miss += 1
+        self._feedback(user, job, crc_ok, cw_llr)
+
     def _feedback(self, user: UserState, job: _Job, crc_ok: np.ndarray,
                   cw_llr: np.ndarray) -> None:
         """ACK/NACK one served slot: finalize, requeue, or exhaust."""
@@ -580,11 +693,13 @@ class SlotScheduler:
         if ok.all():
             self._delivered[h.mcs] += int(ok.size)
             self._rounds.append(h.n_tx)
+            self.finalized_jobs.append(job.job_id)
             job.harq = None  # buffer freed
         elif h.n_tx > self.max_retx:
             self._delivered[h.mcs] += int(ok.sum())
             self._lost += int((~ok).sum())
             self._rounds.append(h.n_tx)
+            self.finalized_jobs.append(job.job_id)
             job.harq = None  # block lost, buffer freed
         else:
             h.acked = ok
@@ -609,8 +724,8 @@ class SlotScheduler:
                 user.mcs -= 1
             user.olla = 0.0
 
-    # -- the TTI loop -----------------------------------------------------
-    def _plan_batches(self) -> list:
+    # -- planning ---------------------------------------------------------
+    def plan_batches(self) -> list:
         """Pick this tick's transmissions and form its compiled batches.
 
         One slot per user per TTI (its oldest job).  Batches group by
@@ -642,47 +757,47 @@ class SlotScheduler:
             batches = batches[:cap]
         return batches
 
-    def tick(self) -> TickStats:
-        """Advance one TTI: arrivals, batched serving, HARQ feedback."""
-        stats = TickStats(tick=self.now)
-        self._arrive(stats)
-
-        for mcs, pairs in self._plan_batches():
-            runner = self.runners[mcs]
-            reqs = [
-                self.ledger.new_request(
-                    self._make_slot(u, job, mcs), user_id=u.user_id
-                )
-                for u, job in pairs
-            ]
-            if not self._warmed[mcs]:
-                runner.warmup(reqs)
-                self._warmed[mcs] = True
-            state = runner.run_batch(reqs)
-            crc_ok = np.asarray(state["crc_ok"])
-            cw_llr = np.asarray(state["cw_llr"])
-            for j, (u, job) in enumerate(pairs):
-                self._occupancy[mcs] += 1
-                self._served += 1
-                stats.n_served += 1
-                if self.now - job.enq_tick > self.deadline_ttis:
-                    self._missed += 1
-                    stats.n_miss += 1
-                self._feedback(
-                    u, job, crc_ok[j].astype(bool), cw_llr[j : j + 1]
-                )
-
-        stats.backlog_after = sum(len(u.backlog) for u in self.users)
+    def end_tick(self, stats: TickStats) -> TickStats:
+        stats.backlog_after = self.backlog
         self.tick_log.append(stats)
         self.now += 1
         return stats
 
-    def run(self, n_ticks: int) -> ClosedLoopReport:
-        for _ in range(n_ticks):
-            self.tick()
-        return self.report()
+    # -- mobility (driven by the mesh scheduler) --------------------------
+    def pending_jobs(self) -> int:
+        return sum(len(u.backlog) for u in self.users)
+
+    def capacity_jobs(self) -> float:
+        """Jobs this cell can serve within its deadline budget — the
+        saturation threshold of the handover/shedding policy.  Unlimited
+        pool capacity means the cell never saturates."""
+        if self.max_batches_per_tick is None:
+            return float("inf")
+        return (self.max_batches_per_tick * self.batch_size
+                * (self.deadline_ttis + 1))
+
+    def shed_tail(self, n: int) -> list[int]:
+        """Drop up to ``n`` not-yet-started jobs from the backlog tails.
+
+        Only new-data jobs are sheddable — a job with an in-flight HARQ
+        process has soft state and delivery history that must finalize
+        through feedback.  Returns the shed job ids (they finalize here,
+        keeping conservation exact)."""
+        shed = []
+        for u in sorted(self.users, key=lambda u: -len(u.backlog)):
+            while len(shed) < n and u.backlog and \
+                    u.backlog[-1].harq is None:
+                job = u.backlog.pop()
+                shed.append(job.job_id)
+        self.finalized_jobs.extend(shed)
+        self.jobs_shed += len(shed)
+        return shed
 
     # -- reporting --------------------------------------------------------
+    @property
+    def backlog(self) -> int:
+        return sum(len(u.backlog) for u in self.users)
+
     @property
     def harq_open(self) -> int:
         """HARQ soft buffers currently allocated (in-flight processes)."""
@@ -690,37 +805,23 @@ class SlotScheduler:
             1 for u in self.users for j in u.backlog if j.harq is not None
         )
 
-    def report(self) -> ClosedLoopReport:
-        wall = sum(r.wall_s for r in self.runners)
-        wall_safe = max(wall, 1e-9)
-        finalized = self._lost + sum(self._delivered)
-        good_bits = sum(
+    def good_bits(self) -> float:
+        return sum(
             d * s.code.k_info for d, s in zip(self._delivered, self.rungs)
         )
+
+    def report(self, *, ladder_name: str, receiver: str, pipelines,
+               wall_s: float, n_batches: int) -> ClosedLoopReport:
+        wall_safe = max(wall_s, 1e-9)
+        finalized = self._lost + sum(self._delivered)
+        good_bits = self.good_bits()
         total_occ = max(sum(self._occupancy), 1)
-        # occupancy-weighted energy over the rung pipelines: total modeled
-        # joules across every served slot / total ops, at each rung's
-        # per-slot EnergyReport
-        energy = gops_w = l1_res = None
-        rung_reps = [
-            (n, r.pipeline.energy_report())
-            for n, r in zip(self._occupancy, self.runners)
-            if n > 0 and r.pipeline.stage_cycles()
-        ]
-        if rung_reps:
-            tot_j = sum(n * er.total_j for n, er in rung_reps)
-            tot_ops = sum(n * er.ops for n, er in rung_reps)
-            tot_l1 = sum(n * er.l1_bytes for n, er in rung_reps)
-            tot_dma = sum(n * er.dma_bytes for n, er in rung_reps)
-            n_slots = sum(n for n, _ in rung_reps)
-            energy = tot_j / n_slots * 1e6
-            gops_w = tot_ops / tot_j * 1e-9 if tot_j > 0 else 0.0
-            l1_res = (
-                tot_l1 / (tot_l1 + tot_dma) if tot_l1 + tot_dma else 0.0
-            )
+        energy, gops_w, l1_res = occupancy_energy(
+            self._occupancy, pipelines
+        )
         return ClosedLoopReport(
-            ladder=self.ladder_name,
-            receiver=self.receiver,
+            ladder=ladder_name,
+            receiver=receiver,
             n_users=len(self.users),
             n_ticks=self.now,
             batch_size=self.batch_size,
@@ -728,8 +829,8 @@ class SlotScheduler:
             deadline_ttis=self.deadline_ttis,
             adapt=self.adapt,
             n_slots=self._served,
-            n_batches=sum(r.n_batches for r in self.runners),
-            wall_s=wall,
+            n_batches=n_batches,
+            wall_s=wall_s,
             slots_per_sec=self._served / wall_safe,
             n_arrivals=self._arrivals,
             deadline_miss_rate=(
@@ -753,10 +854,166 @@ class SlotScheduler:
                 s.name: self._occupancy[i] / total_occ
                 for i, s in enumerate(self.rungs)
             },
-            backlog_left=sum(len(u.backlog) for u in self.users),
+            backlog_left=self.backlog,
             harq_open=self.harq_open,
-            precision=self.runners[0].pipeline.precision,
+            precision=pipelines[0].precision,
             energy_uj_per_slot=energy,
             gops_per_watt=gops_w,
             l1_residency=l1_res,
+            cell=self.name,
+            handover_in=self.handover_in,
+            handover_out=self.handover_out,
+            jobs_shed=self.jobs_shed,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Single-cell closed-loop frontend
+# ---------------------------------------------------------------------------
+
+class SlotScheduler:
+    """TTI-clocked closed-loop slot scheduler over an MCS ladder.
+
+    A thin execution frontend over one :class:`CellLoop`: the state
+    machine plans each tick's batches, this class runs them through the
+    per-rung :class:`BatchRunner` executables and feeds the CRC results
+    back.  For the many-cell version sharded over a device mesh see
+    :class:`repro.serve.cell_mesh.MeshSlotScheduler`.
+
+    Parameters
+    ----------
+    ladder: an :class:`~repro.phy.scenarios.MCSLadder`, a registered
+        ladder name, or a single coded :class:`LinkScenario` (fixed MCS,
+        a one-rung ladder).
+    n_users: users in the cell; each keeps its own queue, HARQ state,
+        and link-adaptation state.
+    batch_size: slots per compiled pipeline invocation (per rung).
+    receiver / options: forwarded to the pipeline builder once per rung.
+    pipelines: prebuilt per-rung pipelines (skips building; lets sweeps
+        reuse compiled executables across scheduler instances).
+    arrival_rate: Poisson mean of new slot arrivals per user per TTI.
+    max_retx: HARQ retransmissions after the first transmission before a
+        block is declared lost and its buffer freed.
+    deadline_ttis: queue-latency budget; a served slot that waited more
+        ticks than this counts as a TTI-deadline miss.
+    max_batches_per_tick: pool capacity — compiled batches the cell can
+        run inside one TTI (None = serve every active user each tick).
+    adapt / target_bler / olla_step: OLLA link adaptation.  On ACK the
+        accumulator rises by ``olla_step``, on NACK it falls by
+        ``olla_step * (1 - target_bler) / target_bler`` (zero drift at
+        the target), and crossing +-1 walks the user one rung up/down.
+    snr_db: the users' channel SNR (defaults to the lowest rung's
+        operating point); snr_spread_db spreads users uniformly around it.
+    seed: the single seed behind every random draw (arrivals, SNR
+        spread, slot/channel/noise realizations) via :func:`cell_rng` —
+        two schedulers with equal config + seed replay identically.
+    """
+
+    def __init__(self, ladder, *, n_users: int = 4, batch_size: int = 4,
+                 receiver: str = "classical", options: Optional[dict] = None,
+                 pipelines: Optional[list] = None,
+                 arrival_rate: float = 1.0, max_retx: int = 2,
+                 deadline_ttis: int = 4,
+                 max_batches_per_tick: Optional[int] = None,
+                 adapt: bool = True, target_bler: float = 0.1,
+                 olla_step: float = 0.1, init_mcs: int = 0,
+                 snr_db: Optional[float] = None,
+                 snr_spread_db: float = 0.0, seed: int = 0):
+        self.ladder_name, self.rungs = resolve_ladder(ladder)
+        self.receiver = receiver
+        self.batch_size = batch_size
+
+        if pipelines is None:
+            pipelines = [
+                _link.build_pipeline(receiver, s, **(options or {}))
+                for s in self.rungs
+            ]
+        assert len(pipelines) == len(self.rungs)
+        self.runners = [BatchRunner(p, batch_size) for p in pipelines]
+        self._warmed = [False] * len(self.runners)
+
+        self.loop = CellLoop(
+            self.rungs, rng=cell_rng(seed), n_users=n_users,
+            batch_size=batch_size, arrival_rate=arrival_rate,
+            max_retx=max_retx, deadline_ttis=deadline_ttis,
+            max_batches_per_tick=max_batches_per_tick, adapt=adapt,
+            target_bler=target_bler, olla_step=olla_step,
+            init_mcs=init_mcs, snr_db=snr_db,
+            snr_spread_db=snr_spread_db,
+        )
+        self.ledger = SlotLedger()
+
+    # delegation: the state machine is the source of truth
+    @property
+    def users(self):
+        return self.loop.users
+
+    @property
+    def tick_log(self):
+        return self.loop.tick_log
+
+    @property
+    def now(self) -> int:
+        return self.loop.now
+
+    @property
+    def max_retx(self) -> int:
+        return self.loop.max_retx
+
+    @property
+    def adapt(self) -> bool:
+        return self.loop.adapt
+
+    @property
+    def harq_open(self) -> int:
+        return self.loop.harq_open
+
+    def inject_backlog(self, n_per_user: int) -> None:
+        self.loop.inject_backlog(n_per_user)
+
+    def _plan_batches(self) -> list:
+        return self.loop.plan_batches()
+
+    # -- the TTI loop -----------------------------------------------------
+    def tick(self) -> TickStats:
+        """Advance one TTI: arrivals, batched serving, HARQ feedback."""
+        loop = self.loop
+        stats = TickStats(tick=loop.now)
+        loop.arrive(stats)
+
+        for mcs, pairs in loop.plan_batches():
+            runner = self.runners[mcs]
+            reqs = [
+                self.ledger.new_request(
+                    loop.make_slot(u, job, mcs), user_id=u.user_id
+                )
+                for u, job in pairs
+            ]
+            if not self._warmed[mcs]:
+                runner.warmup(reqs)
+                self._warmed[mcs] = True
+            state = runner.run_batch(reqs)
+            loop.n_batches += 1
+            crc_ok = np.asarray(state["crc_ok"])
+            cw_llr = np.asarray(state["cw_llr"])
+            for j, (u, job) in enumerate(pairs):
+                loop.serve_feedback(
+                    u, job, mcs, crc_ok[j].astype(bool),
+                    cw_llr[j : j + 1], stats,
+                )
+        return loop.end_tick(stats)
+
+    def run(self, n_ticks: int) -> ClosedLoopReport:
+        for _ in range(n_ticks):
+            self.tick()
+        return self.report()
+
+    # -- reporting --------------------------------------------------------
+    def report(self) -> ClosedLoopReport:
+        return self.loop.report(
+            ladder_name=self.ladder_name,
+            receiver=self.receiver,
+            pipelines=[r.pipeline for r in self.runners],
+            wall_s=sum(r.wall_s for r in self.runners),
+            n_batches=sum(r.n_batches for r in self.runners),
         )

@@ -1,0 +1,262 @@
+"""Property-based scenario/traffic fuzzing of the PHY pipeline invariants.
+
+Three invariants must hold for *every* valid (grid, modem, code, SNR,
+arrival-rate, max-retx) combination, not just the registered operating
+points:
+
+* **LLR sign agreement** — the fused detect+demap path agrees with the
+  unfused linalg-solve oracle on >= 99% of LLR signs.
+* **BLER monotone in SNR** — more SNR never makes the coded link worse
+  (beyond sampling slack).
+* **closed-loop residual <= first-tx BLER** — after a full drain, HARQ
+  with IR combining can only recover blocks, never lose extra ones
+  (exact: every lost block failed its first transmission too).
+* **conservation under random mesh configs** — no transport-block job is
+  lost or duplicated by the mesh closed loop, whatever the topology.
+
+A small deterministic core (fixed combos sampled from the same space)
+always runs in tier-1 — even without hypothesis installed.  The
+hypothesis tests run a derandomized, small-example CI profile, with
+wider `slow`-marked variants beyond it.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref, rx_fused
+from repro.phy import link as _link
+from repro.phy.link import build_pipeline
+from repro.phy.scenarios import get_scenario
+from repro.serve import MeshSlotScheduler, SlotScheduler
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # tier-1 core below still runs
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+
+# the sampled space: every registered coded operating point x small grids
+# x an SNR offset around the operating point
+CODED_BASES = (
+    "siso-qpsk-r12-snr8",
+    "siso-qam16-r12-snr15",
+    "siso-qam16-r34-snr18",
+    "mimo2x2-qam16-r12-snr17",
+    "mimo2x2-qam16-r34-snr20",
+)
+GRID_SIZES = (32, 64)
+
+
+def _scenario(base: str, n_sc: int, snr_off: float):
+    """A small-grid clone of ``base`` shifted ``snr_off`` dB off its
+    operating point (unregistered: pipelines take scenario objects)."""
+    scn = get_scenario(base)
+    grid = dataclasses.replace(
+        scn.grid, n_subcarriers=n_sc, fft_size=n_sc, n_taps=4,
+        delay_spread=1.0,
+    )
+    return scn.replace(
+        name=f"fuzz-{base}-sc{n_sc}", grid=grid,
+        snr_db=scn.snr_db + snr_off,
+    )
+
+
+# -- the invariants ---------------------------------------------------------
+
+def _check_llr_sign_agreement(scn, key) -> float:
+    """Fused detect+demap vs the unfused oracle: >= 99% LLR signs."""
+    slot = scn.make_batch(key, 2)
+    h = jnp.mean(slot["h"], axis=1)
+    _, _, llr_f = rx_fused.mmse_detect_demap(
+        slot["y"], h, slot["noise_var"], scn.modem, use_pallas=False
+    )
+    _, _, llr_r = ref.mmse_detect_demap_ref(
+        slot["y"], h, slot["noise_var"], scn.modem
+    )
+    agree = float(jnp.mean((llr_f > 0) == (llr_r > 0)))
+    assert agree >= 0.99, (scn.name, agree)
+    return agree
+
+
+def _bler(scn, key, batch: int = 4) -> float:
+    pipe = build_pipeline("classical", scn)
+    state = pipe.run(scn.make_batch(key, batch))
+    return float(_link.slot_metrics(state, scn)["bler"])
+
+
+def _check_bler_monotone(scn, key, step_db: float = 6.0,
+                         slack: float = 0.15) -> None:
+    """More SNR never hurts the coded link (modulo sampling slack)."""
+    lo = _bler(scn, key)
+    hi = _bler(scn.replace(snr_db=scn.snr_db + step_db), key)
+    assert hi <= lo + slack, (scn.name, lo, hi)
+
+
+def _check_residual_le_first_tx(scn, max_retx: int, seed: int) -> None:
+    """After a full drain the HARQ closed loop can only recover blocks:
+    every lost block also failed its first transmission, and once all
+    processes finalize the two rates share a denominator — so
+    residual <= first-tx exactly, no slack."""
+    sch = SlotScheduler(
+        scn, n_users=2, batch_size=2, arrival_rate=0.0,
+        max_retx=max_retx, adapt=False, seed=seed,
+        snr_db=scn.snr_db - 3.0,  # make first transmissions fail
+    )
+    sch.inject_backlog(2)
+    for _ in range(8 * (max_retx + 1)):
+        if sch.loop.backlog == 0:
+            break
+        sch.tick()
+    rep = sch.report()
+    assert rep.backlog_left == 0, "closed loop failed to drain"
+    assert rep.harq_open == 0, "HARQ buffers leaked"
+    assert rep.first_tx_bler is not None
+    assert rep.residual_bler <= rep.first_tx_bler + 1e-12, (
+        scn.name, rep.residual_bler, rep.first_tx_bler
+    )
+
+
+def _check_mesh_conservation(n_cells: int, arrival_rate: float,
+                             cap, max_retx: int, seed: int) -> None:
+    sch = MeshSlotScheduler.uniform(
+        "fz-ladder", n_cells, n_users=2, arrival_rate=arrival_rate,
+        hot_cells=1, hot_factor=4.0, batch_size=2,
+        max_batches_per_tick=cap, deadline_ttis=1, max_retx=max_retx,
+        seed=seed,
+    )
+    sch.run(3)
+    ids = sorted(sch.finalized_job_ids() + sch.queued_job_ids())
+    assert len(ids) == len(set(ids)), "job duplicated"
+    assert ids == list(range(sch.jobs_submitted)), "job lost"
+
+
+def _fz_ladder():
+    """One small registered ladder for the mesh-conservation fuzz."""
+    from repro.phy.scenarios import (
+        MCSLadder, get_ladder, ladder_names, register_ladder,
+        register_scenario,
+    )
+
+    try:
+        return get_ladder("fz-ladder")
+    except KeyError:
+        pass
+    for base, name in (("siso-qpsk-r12-snr8", "fz-qpsk"),
+                       ("siso-qam16-r12-snr15", "fz-qam16")):
+        register_scenario(_scenario(base, 64, 0.0).replace(name=name))
+    return register_ladder(MCSLadder("fz-ladder", ("fz-qpsk", "fz-qam16")))
+
+
+# -- tier-1 deterministic core (runs with or without hypothesis) ------------
+
+CORE_CASES = [
+    # (base scenario, n_subcarriers, snr offset, max_retx, seed)
+    ("siso-qpsk-r12-snr8", 64, 0.0, 1, 0),
+    ("siso-qam16-r12-snr15", 32, 2.0, 2, 1),
+    ("mimo2x2-qam16-r12-snr17", 64, -1.0, 2, 2),
+]
+
+
+@pytest.mark.parametrize("base,n_sc,snr_off,max_retx,seed", CORE_CASES)
+def test_core_pipeline_invariants(base, n_sc, snr_off, max_retx, seed):
+    scn = _scenario(base, n_sc, snr_off)
+    key = jax.random.PRNGKey(seed)
+    _check_llr_sign_agreement(scn, key)
+    _check_bler_monotone(scn, key)
+
+
+@pytest.mark.parametrize("base,n_sc,snr_off,max_retx,seed",
+                         CORE_CASES[:2])
+def test_core_closed_loop_invariants(base, n_sc, snr_off, max_retx, seed):
+    scn = _scenario(base, n_sc, snr_off)
+    _check_residual_le_first_tx(scn, max_retx, seed)
+
+
+def test_core_mesh_conservation():
+    _fz_ladder()
+    _check_mesh_conservation(
+        n_cells=3, arrival_rate=0.8, cap=1, max_retx=1, seed=3
+    )
+
+
+# -- hypothesis fuzz --------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    # derandomized, small-example CI profile: reproducible in every run,
+    # no example database, no flaky deadlines
+    CI_PROFILE = settings(
+        derandomize=True, max_examples=5, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    SLOW_PROFILE = settings(
+        derandomize=True, max_examples=20, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+
+    combos = st.tuples(
+        st.sampled_from(CODED_BASES),
+        st.sampled_from(GRID_SIZES),
+        st.floats(min_value=-2.0, max_value=6.0,
+                  allow_nan=False, allow_infinity=False),
+        st.integers(min_value=0, max_value=3),  # max_retx
+        st.integers(min_value=0, max_value=2**16),  # seed
+    )
+
+    @CI_PROFILE
+    @given(combo=combos)
+    def test_fuzz_llr_sign_agreement(combo):
+        base, n_sc, snr_off, _retx, seed = combo
+        scn = _scenario(base, n_sc, snr_off)
+        _check_llr_sign_agreement(scn, jax.random.PRNGKey(seed % 97))
+
+    @CI_PROFILE
+    @given(combo=combos)
+    def test_fuzz_bler_monotone(combo):
+        base, n_sc, snr_off, _retx, seed = combo
+        scn = _scenario(base, n_sc, snr_off)
+        _check_bler_monotone(scn, jax.random.PRNGKey(seed % 97))
+
+    @CI_PROFILE
+    @given(combo=combos)
+    def test_fuzz_closed_loop_residual(combo):
+        base, n_sc, snr_off, retx, seed = combo
+        scn = _scenario(base, n_sc, snr_off)
+        _check_residual_le_first_tx(scn, retx, seed % 97)
+
+    @CI_PROFILE
+    @given(
+        n_cells=st.integers(min_value=1, max_value=4),
+        arrival_rate=st.floats(min_value=0.2, max_value=1.5),
+        cap=st.sampled_from([None, 1, 2]),
+        max_retx=st.integers(min_value=0, max_value=2),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_fuzz_mesh_conservation(n_cells, arrival_rate, cap,
+                                    max_retx, seed):
+        _fz_ladder()
+        _check_mesh_conservation(
+            n_cells, arrival_rate, cap, max_retx, seed % 97
+        )
+
+    @pytest.mark.slow
+    @SLOW_PROFILE
+    @given(combo=combos)
+    def test_fuzz_closed_loop_residual_wide(combo):
+        base, n_sc, snr_off, retx, seed = combo
+        scn = _scenario(base, n_sc, snr_off)
+        _check_residual_le_first_tx(scn, retx, seed % 997)
+
+    @pytest.mark.slow
+    @SLOW_PROFILE
+    @given(combo=combos)
+    def test_fuzz_llr_sign_agreement_wide(combo):
+        base, n_sc, snr_off, _retx, seed = combo
+        scn = _scenario(base, n_sc, snr_off)
+        _check_llr_sign_agreement(scn, jax.random.PRNGKey(seed % 997))
