@@ -18,6 +18,7 @@ module directly to refresh its ``experiments/phy/*.json``):
   harq      — closed-loop HARQ/adaptive-MCS serving          (beyond-paper)
   precision — int8/fp8 kernel paths + modeled GOPS/W         (beyond-paper)
   mesh_cl   — mesh-scale closed loop: cells x users x skew   (beyond-paper)
+  faults    — supervised mesh under seeded fault schedules   (beyond-paper)
 
 ``--snapshot`` instead serves one coded waterfall scenario at fp32 /
 int8 / fp8 through ``PhyServeEngine`` and *appends* the result to the
@@ -83,6 +84,8 @@ def snapshot_rows() -> list:
         print(f"snapshot {rep.pipeline}: {rows[-1]}")
     rows.append(mesh_closed_row())
     print(f"snapshot {rows[-1]['pipeline']}: {rows[-1]}")
+    rows.append(faults_row())
+    print(f"snapshot {rows[-1]['pipeline']}: {rows[-1]}")
     return rows
 
 
@@ -102,6 +105,32 @@ def mesh_closed_row() -> dict:
         "goodput_mbps": round(rep.goodput_bits_per_sec / 1e6, 2),
         "gops_per_watt": round(rep.gops_per_watt, 1),
         "l1_residency": round(rep.l1_residency, 3),
+    }
+
+
+def faults_row() -> dict:
+    """Supervised serving point for the cross-PR trajectory: the
+    canonical fault schedule (NaN burst + crash + stragglers) on 8
+    cells, per-tick checkpoints — what the pool still delivers while
+    failing and recovering."""
+    from benchmarks import bench_faults as bf
+
+    sch = bf._supervisor(bf.canonical_plan())
+    rep = sch.run(6)
+    bf._assert_accounted(sch)
+    return {
+        "pipeline": "mesh-supervised-8c",
+        "precision": rep.precision,
+        "slots_per_sec": round(rep.slots_per_sec, 1),
+        "bler": round(rep.residual_bler, 4)
+        if rep.residual_bler is not None else None,
+        "goodput_mbps": round(rep.goodput_bits_per_sec / 1e6, 2),
+        "gops_per_watt": round(rep.gops_per_watt, 1),
+        "l1_residency": round(rep.l1_residency, 3),
+        "faults_injected": rep.faults_injected,
+        "crashes": rep.crashes,
+        "recoveries": rep.recoveries,
+        "jobs_failed": rep.jobs_failed,
     }
 
 
@@ -131,6 +160,7 @@ def run_sections() -> None:
     from benchmarks import (
         bench_coding,
         bench_concurrent,
+        bench_faults,
         bench_gemm,
         bench_harq_serve,
         bench_mesh_closed_loop,
@@ -158,6 +188,7 @@ def run_sections() -> None:
         ("harq", bench_harq_serve),
         ("precision", bench_precision),
         ("mesh_cl", bench_mesh_closed_loop),
+        ("faults", bench_faults),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -13,6 +13,8 @@ Sources -> targets:
   experiments/phy/mesh_closed_loop.json
                                   -> docs/EXPERIMENTS.md  (mesh-scale
                                      closed-loop sweep)
+  experiments/phy/faults.json     -> docs/EXPERIMENTS.md  (fault-rate
+                                     graceful-degradation sweep)
   repro.phy.scenarios registry    -> docs/SCENARIOS.md    (scenario table)
   repro.phy.scenarios ladders     -> docs/SERVING.md      (MCS-ladder table)
   experiments/dryrun/*.json       -> EXPERIMENTS.md       (legacy LM tables,
@@ -41,6 +43,7 @@ PHY_CODING = "experiments/phy/coding.json"
 PHY_HARQ = "experiments/phy/harq.json"
 PHY_PRECISION = "experiments/phy/precision.json"
 PHY_MESH_CL = "experiments/phy/mesh_closed_loop.json"
+PHY_FAULTS = "experiments/phy/faults.json"
 
 
 def load_dryrun(d):
@@ -407,6 +410,25 @@ def mesh_closed_loop_table(data):
     return "\n".join(rows)
 
 
+# -- fault-tolerance table (docs/EXPERIMENTS.md) ----------------------------
+
+def faults_table(data):
+    """Graceful degradation of the supervised mesh vs seeded fault rate."""
+    rows = [
+        "| fault rate | injected | retries | degraded | quarantined batches | cell quarantines | crashes | recovered | jobs failed | residual BLER | goodput kbit/TTI |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for p in data["sweep"]:
+        rows.append(
+            f"| {p['fault_rate']:g} | {p['faults_injected']} | "
+            f"{p['step_retries']} | {p['degraded_batches']} | "
+            f"{p['quarantined_batches']} | {p['cell_quarantines']} | "
+            f"{p['crashes']} | {p['recoveries']} | {p['jobs_failed']} | "
+            f"{_opt(p['residual_bler'])} | {p['goodput_kbits_per_tti']} |"
+        )
+    return "\n".join(rows)
+
+
 # -- scenario catalogue (docs/SCENARIOS.md) ---------------------------------
 
 def scenario_table():
@@ -525,6 +547,12 @@ def targets():
                 mcl = json.load(f)
             sections += [
                 ("mesh-closed-loop-table", mesh_closed_loop_table(mcl)),
+            ]
+        if os.path.exists(PHY_FAULTS):
+            with open(PHY_FAULTS) as f:
+                fl = json.load(f)
+            sections += [
+                ("faults-table", faults_table(fl)),
             ]
         if sections:
             out.append(("docs/EXPERIMENTS.md",

@@ -113,6 +113,19 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def load_flat(self, step: int) -> dict[str, np.ndarray]:
+        """Load a checkpoint's raw ``name -> array`` dict (the flattened
+        leaves, names "/"-joined as written).
+
+        For callers that rebuild live state procedurally instead of
+        restoring into a matching pytree — e.g. the serving supervisor
+        reconstructing a crashed cell's :class:`CellLoop` (queues, HARQ
+        buffers, RNG stream) from its snapshot.
+        """
+        path = os.path.join(self.directory, f"step_{step:08d}", "arrays.npz")
+        data = np.load(path)
+        return {k: data[k] for k in data.files}
+
     def restore(
         self, step: int, target: PyTree, shardings: Optional[PyTree] = None
     ) -> PyTree:

@@ -82,11 +82,23 @@ class TuneCache:
         return self._entries
 
     def save(self):
-        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        """Atomically persist the cache: write a sibling tmp file and
+        ``os.replace`` it over the target, so an interrupted or
+        concurrent run can never leave a truncated cache behind (a
+        corrupt file would otherwise poison block-shape selection until
+        manually deleted — ``_load`` regenerates from empty instead)."""
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
         payload = {"version": _VERSION, "entries": self._load()}
-        with open(self.path, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-            f.write("\n")
+        tmp = os.path.join(d, f".{os.path.basename(self.path)}.{os.getpid()}.tmp")
+        try:
+            with open(tmp, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, self.path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
 
     # -- access -----------------------------------------------------------
     def lookup(self, key: str) -> Optional[tuple]:

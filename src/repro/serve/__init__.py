@@ -5,15 +5,26 @@ closed-loop TTI runtime with HARQ + link adaptation — single cell
 (:class:`SlotScheduler`) and mesh scale (:class:`MeshSlotScheduler`).
 The PHY paths share one slot-scheduler core (:mod:`repro.serve.runtime`),
 and the closed-loop paths share one per-cell state machine
-(:class:`CellLoop`)."""
+(:class:`CellLoop`).  Fault tolerance rides on top: deterministic fault
+injection (:class:`FaultPlan`/:class:`FaultInjector`) and the supervised
+runtime (:class:`Supervisor`, :class:`SupervisedBatchRunner`) with
+non-finite guards, bounded retries, cell quarantine, and checkpointed
+crash recovery."""
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.runtime import (
     BatchRunner, CellLoop, ClosedLoopReport, JobCounter, PhyServeReport,
     SlotLedger, SlotRequest, SlotScheduler, build_serve_report, cell_rng,
-    make_traffic, rng_key, slot_metric_means, stack_slots,
+    make_traffic, rng_key, slot_metric_means, stack_slots, validate_slots,
 )
 from repro.serve.phy_engine import PhyServeEngine
 from repro.serve.cell_mesh import (
     CellMeshEngine, CellSpec, ClosedCellSpec, MeshClosedLoopReport,
     MeshServeReport, MeshSlotScheduler, cell, closed_cell,
+)
+from repro.serve.faults import (
+    FAULT_KINDS, FaultEvent, FaultInjector, FaultPlan, InjectedFault,
+)
+from repro.serve.supervisor import (
+    SupervisedBatchRunner, Supervisor, restore_cell_loop,
+    snapshot_cell_loop,
 )

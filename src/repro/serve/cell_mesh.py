@@ -602,6 +602,18 @@ class MeshClosedLoopReport:
     energy_uj_per_slot: Optional[float] = None
     gops_per_watt: Optional[float] = None
     l1_residency: Optional[float] = None
+    # fault-tolerance accounting (supervised runs only; all zero on a
+    # clean unsupervised run so reports stay field-for-field comparable)
+    faults_injected: int = 0
+    step_retries: int = 0
+    degraded_batches: int = 0
+    quarantined_batches: int = 0
+    batches_deferred: int = 0
+    ticks_over_budget: int = 0
+    cell_quarantines: int = 0
+    crashes: int = 0
+    recoveries: int = 0
+    jobs_failed: int = 0
     cells: dict = dataclasses.field(default_factory=dict)
 
     def summary(self) -> str:
@@ -625,6 +637,11 @@ class MeshClosedLoopReport:
         if self.handovers or self.jobs_shed:
             parts.append(
                 f"handovers={self.handovers} shed={self.jobs_shed}"
+            )
+        if self.faults_injected or self.crashes or self.jobs_failed:
+            parts.append(
+                f"faults={self.faults_injected} crashes={self.crashes} "
+                f"recovered={self.recoveries} failed={self.jobs_failed}"
             )
         return "  ".join(parts)
 
@@ -686,6 +703,14 @@ class MeshSlotScheduler:
         self.max_retx = max_retx
         self.specs = list(cells)
         self.job_counter = JobCounter()
+        # loop-construction parameters, kept so a crashed cell's loop can
+        # be rebuilt from its spec (see _make_loop / the Supervisor)
+        self.seed = seed
+        self.deadline_ttis = deadline_ttis
+        self.max_batches_per_tick = max_batches_per_tick
+        self.adapt = adapt
+        self.target_bler = target_bler
+        self.olla_step = olla_step
 
         donate = jax.default_backend() != "cpu"
         by_key: dict[tuple, list[int]] = {}
@@ -704,22 +729,14 @@ class MeshSlotScheduler:
             for i in idxs:
                 self._group_of[i] = g
 
-        self.loops: list[CellLoop] = []
+        self._uid_bases: list[int] = []
         uid_base = 0
-        for i, spec in enumerate(self.specs):
-            g = self._group_of[i]
-            self.loops.append(CellLoop(
-                g.rungs, name=spec.name, rng=cell_rng(seed, i),
-                n_users=spec.n_users, batch_size=batch_size,
-                arrival_rate=spec.arrival_rate, max_retx=max_retx,
-                deadline_ttis=deadline_ttis,
-                max_batches_per_tick=max_batches_per_tick, adapt=adapt,
-                target_bler=target_bler, olla_step=olla_step,
-                init_mcs=spec.init_mcs, snr_db=spec.snr_db,
-                snr_spread_db=spec.snr_spread_db, uid_base=uid_base,
-                job_ids=self.job_counter,
-            ))
+        for spec in self.specs:
+            self._uid_bases.append(uid_base)
             uid_base += spec.n_users
+        self.loops: list[CellLoop] = [
+            self._make_loop(i) for i in range(len(self.specs))
+        ]
 
         if mesh is None:
             mesh = make_cell_mesh(len(self.specs))
@@ -753,6 +770,27 @@ class MeshSlotScheduler:
             for i in range(n_cells)
         ]
         return cls(specs, **kw)
+
+    def _make_loop(self, i: int) -> CellLoop:
+        """Build cell ``i``'s :class:`CellLoop` from its spec.
+
+        Factored out of ``__init__`` so a supervisor can reconstruct a
+        crashed cell (same spec, same seeded RNG stream — the restored
+        checkpoint then overwrites the stream position and state).
+        """
+        spec = self.specs[i]
+        g = self._group_of[i]
+        return CellLoop(
+            g.rungs, name=spec.name, rng=cell_rng(self.seed, i),
+            n_users=spec.n_users, batch_size=self.batch_size,
+            arrival_rate=spec.arrival_rate, max_retx=self.max_retx,
+            deadline_ttis=self.deadline_ttis,
+            max_batches_per_tick=self.max_batches_per_tick,
+            adapt=self.adapt, target_bler=self.target_bler,
+            olla_step=self.olla_step, init_mcs=spec.init_mcs,
+            snr_db=spec.snr_db, snr_spread_db=spec.snr_spread_db,
+            uid_base=self._uid_bases[i], job_ids=self.job_counter,
+        )
 
     # -- invariants (the test harness's observation surface) --------------
     @property
@@ -858,17 +896,28 @@ class MeshSlotScheduler:
         }
 
     # -- the lockstep TTI loop --------------------------------------------
-    def tick(self) -> list[TickStats]:
-        """Advance every cell one TTI in lockstep."""
-        stats = [TickStats(tick=loop.now) for loop in self.loops]
-        for loop, st in zip(self.loops, stats):
-            loop.arrive(st)
-        self._rebalance()
+    #
+    # tick() is decomposed into overridable hooks so a supervisor
+    # (repro.serve.supervisor) can interpose fault handling without
+    # duplicating the lockstep machinery.  The base implementations keep
+    # semantics bit-identical to the pre-hook monolithic loop.
 
-        # plan: every cell's batches, bucketed per (ladder group, rung)
+    def _begin_tick(self) -> None:
+        """Hook before any per-tick mutation (supervisor: crash/restore,
+        quarantine lifecycle).  Base: no-op."""
+
+    def _cell_plannable(self, ci: int) -> bool:
+        """Whether cell ``ci`` may plan batches this tick (supervisor:
+        False while quarantined — arrivals still accrue).  Base: True."""
+        return True
+
+    def _plan_tick(self) -> list:
+        """Plan every cell's batches, bucketed per (ladder group, rung)."""
         work: dict[tuple, list[_ClosedLane]] = {}
         for gi, g in enumerate(self.groups):
             for ci in g.cell_idxs:
+                if not self._cell_plannable(ci):
+                    continue
                 loop = self.loops[ci]
                 for mcs, pairs in loop.plan_batches():
                     slots = [
@@ -879,36 +928,66 @@ class MeshSlotScheduler:
                         cell_idx=ci, pairs=pairs, slots=slots,
                         pad=self.batch_size - len(pairs),
                     ))
-        items = sorted(work.items())
+        return sorted(work.items())
 
-        # serve: one sharded step per bucket; staging of bucket k+1
-        # overlaps device compute of bucket k, warmups are untimed
-        if items:
-            staged = self._stage(items[0][1])
-            for i, ((gi, mcs), lanes) in enumerate(items):
-                g = self.groups[gi]
-                step = g.steps[mcs]
-                wkey = (gi, mcs, self._bucket(len(lanes)))
-                if wkey not in self._warmed:
-                    jax.block_until_ready(step(staged))
-                    self._warmed.add(wkey)
-                    # donated steps consume their staged buffers
-                    staged = self._stage(lanes)
-                t0 = time.perf_counter()
-                state = step(staged)  # async dispatch
-                staged = (self._stage(items[i + 1][1])
-                          if i + 1 < len(items) else None)
-                state = jax.block_until_ready(state)
-                self.wall_s += time.perf_counter() - t0
-                self.n_steps += 1
-                self.n_real_lanes += len(lanes)
-                self.n_filler_lanes += (
-                    self._bucket(len(lanes)) - len(lanes)
-                )
-                self._feedback(lanes, mcs, state, stats)
+    def _serve_items(self, items: list, stats: list[TickStats]) -> None:
+        """Serve the tick's buckets; staging of bucket k+1 overlaps device
+        compute of bucket k (the prefetch thunk runs inside _dispatch's
+        async-dispatch window), warmups are untimed."""
+        if not items:
+            return
+        staged = self._stage(items[0][1])
+        for i, ((gi, mcs), lanes) in enumerate(items):
+            prefetch = (
+                (lambda j=i + 1: self._stage(items[j][1]))
+                if i + 1 < len(items) else None
+            )
+            staged = self._dispatch(gi, mcs, lanes, staged, stats,
+                                    prefetch)
 
+    def _dispatch(self, gi: int, mcs: int, lanes: list[_ClosedLane],
+                  staged: dict, stats: list[TickStats],
+                  prefetch=None) -> Optional[dict]:
+        """Run one (group, rung) bucket step and fan feedback back out.
+
+        Returns the next bucket's staged batch (from ``prefetch``), so
+        the caller's double buffering survives overrides.
+        """
+        g = self.groups[gi]
+        step = g.steps[mcs]
+        wkey = (gi, mcs, self._bucket(len(lanes)))
+        if wkey not in self._warmed:
+            jax.block_until_ready(step(staged))
+            self._warmed.add(wkey)
+            # donated steps consume their staged buffers
+            staged = self._stage(lanes)
+        t0 = time.perf_counter()
+        state = step(staged)  # async dispatch
+        nxt = prefetch() if prefetch is not None else None
+        state = jax.block_until_ready(state)
+        self.wall_s += time.perf_counter() - t0
+        self.n_steps += 1
+        self.n_real_lanes += len(lanes)
+        self.n_filler_lanes += self._bucket(len(lanes)) - len(lanes)
+        self._feedback(lanes, mcs, state, stats)
+        return nxt
+
+    def _end_tick_hook(self, stats: list[TickStats]) -> None:
+        """Hook after every cell's end_tick (supervisor: periodic
+        checkpointing).  Base: no-op."""
+
+    def tick(self) -> list[TickStats]:
+        """Advance every cell one TTI in lockstep."""
+        self._begin_tick()
+        stats = [TickStats(tick=loop.now) for loop in self.loops]
+        for loop, st in zip(self.loops, stats):
+            loop.arrive(st)
+        self._rebalance()
+        items = self._plan_tick()
+        self._serve_items(items, stats)
         for loop, st in zip(self.loops, stats):
             loop.end_tick(st)
+        self._end_tick_hook(stats)
         self.now += 1
         return stats
 

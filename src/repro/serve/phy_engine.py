@@ -38,20 +38,32 @@ class PhyServeEngine:
     repeating its first user), so the pipeline compiles exactly once.
     """
 
-    def __init__(self, pipeline: _link.ReceiverPipeline, batch_size: int):
+    def __init__(self, pipeline: _link.ReceiverPipeline, batch_size: int,
+                 *, supervised: bool = False, receiver: str = "classical",
+                 max_retries: int = 2, backoff_s: float = 0.0):
         self.pipeline = pipeline
         self.batch_size = batch_size
+        # supervised serving guards every batch: bounded retry on step
+        # exceptions, non-finite outputs degrade once to the fp32
+        # unfused reference pipeline (repro.serve.supervisor)
+        self.supervised = supervised
+        self.receiver = receiver
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
         self._queue: list[SlotRequest] = []
         self._ledger = SlotLedger()
 
     @classmethod
     def from_scenario(cls, scenario, receiver: str = "classical",
-                      batch_size: int = 4, **options) -> "PhyServeEngine":
+                      batch_size: int = 4, supervised: bool = False,
+                      **options) -> "PhyServeEngine":
         """Build the pipeline and the engine in one go.
 
         ``scenario`` is a registered name or a LinkScenario; ``options``
         pass through to the pipeline builder (e.g. ``fused=True`` to serve
         the classical chain through the fused receiver kernels).
+        ``supervised=True`` serves through the guarded
+        :class:`~repro.serve.supervisor.SupervisedBatchRunner`.
         """
         from repro.phy.scenarios import get_scenario
 
@@ -59,7 +71,19 @@ class PhyServeEngine:
             scenario = get_scenario(scenario)
         return cls(
             _link.build_pipeline(receiver, scenario, **options),
-            batch_size=batch_size,
+            batch_size=batch_size, supervised=supervised,
+            receiver=receiver,
+        )
+
+    def _make_runner(self) -> BatchRunner:
+        if not self.supervised:
+            return BatchRunner(self.pipeline, self.batch_size)
+        # lazy import: supervisor imports the serving core, not vice versa
+        from repro.serve.supervisor import SupervisedBatchRunner
+
+        return SupervisedBatchRunner(
+            self.pipeline, self.batch_size, receiver=self.receiver,
+            max_retries=self.max_retries, backoff_s=self.backoff_s,
         )
 
     # -- traffic ----------------------------------------------------------
@@ -87,7 +111,7 @@ class PhyServeEngine:
         """
         reqs = self._queue
         self._queue = []
-        runner = BatchRunner(self.pipeline, self.batch_size)
+        runner = self._make_runner()
         n_batches = runner.drain(reqs, warmup=warmup)
         return build_serve_report(
             self.pipeline, self.pipeline.scenario,

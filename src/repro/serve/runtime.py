@@ -154,6 +154,43 @@ class SlotLedger:
         return SlotRequest(user_id=user_id, slot=slot)
 
 
+def validate_slots(slots: list, keys=BATCHED_KEYS) -> None:
+    """Check a batch's slots agree on keys, trailing shapes, and dtypes.
+
+    Mismatched slots used to surface as opaque XLA shape errors from
+    inside ``jit`` (or worse, silent mis-stacking); this names the
+    offending key and slot up front.  Batched keys may differ in their
+    leading (batch) dimension only; everything after it is the
+    scenario's static structure and must match the head slot exactly.
+    """
+    head = slots[0]
+    for i, s in enumerate(slots[1:], 1):
+        extra, missing = set(s) - set(head), set(head) - set(s)
+        if extra or missing:
+            raise ValueError(
+                f"slot {i} keys differ from slot 0: "
+                f"missing {sorted(missing)}, unexpected {sorted(extra)} "
+                "— all slots in a batch must come from the same scenario/"
+                "slot builder"
+            )
+        for k in keys:
+            if k not in head:
+                continue
+            a, b = np.shape(head[k]), np.shape(s[k])
+            if a[1:] != b[1:]:
+                raise ValueError(
+                    f"slot {i} key {k!r}: shape {b} != {a} of slot 0 "
+                    "(trailing dims are scenario-static and must match; "
+                    "check grid/code/MCS consistency of the batch)"
+                )
+            da = getattr(head[k], "dtype", None)
+            db = getattr(s[k], "dtype", None)
+            if da != db:
+                raise ValueError(
+                    f"slot {i} key {k!r}: dtype {db} != {da} of slot 0"
+                )
+
+
 def stack_slots(slots: list, pad: int = 0, keys=BATCHED_KEYS, xp=jnp
                 ) -> dict:
     """Stack per-user slots (batch dim 1 each) into one batched slot.
@@ -162,7 +199,10 @@ def stack_slots(slots: list, pad: int = 0, keys=BATCHED_KEYS, xp=jnp
     side info is taken from the first slot (it is scenario-static).
     ``xp`` picks the array backend: jnp for direct device dispatch, np for
     host-side staging (the mesh engine stacks lanes before transfer).
+    Slots are validated first (:func:`validate_slots`) so shape/dtype
+    mismatches fail with the offending key named instead of an XLA error.
     """
+    validate_slots(slots, keys)
     slots = list(slots) + [slots[0]] * pad
     batch = dict(slots[0])
     for k in keys:
@@ -298,6 +338,15 @@ class BatchRunner:
         )
         jax.block_until_ready(self.pipeline.run(batch))
 
+    def _execute(self, batch: dict) -> dict:
+        """Run one stacked batch inside the timed window.  Overridable:
+        :class:`repro.serve.supervisor.SupervisedBatchRunner` interposes
+        retry and non-finite-guard handling here."""
+        t0 = time.perf_counter()
+        state = jax.block_until_ready(self.pipeline.run(batch))
+        self.wall_s += time.perf_counter() - t0
+        return state
+
     def run_batch(self, reqs: list) -> dict:
         """Serve one chunk of requests; returns the raw pipeline state.
 
@@ -307,9 +356,7 @@ class BatchRunner:
         batch = stack_slots(
             [r.slot for r in reqs], self.batch_size - len(reqs)
         )
-        t0 = time.perf_counter()
-        state = jax.block_until_ready(self.pipeline.run(batch))
-        self.wall_s += time.perf_counter() - t0
+        state = self._execute(batch)
         self.n_batches += 1
         metrics = _link.slot_metrics(
             state, self.pipeline.scenario, per_slot=True
@@ -427,6 +474,14 @@ class ClosedLoopReport:
     handover_in: int = 0
     handover_out: int = 0
     jobs_shed: int = 0
+    # fault-tolerance accounting (supervised runs only; all zero on a
+    # clean unsupervised run so reports stay field-for-field comparable)
+    faults: int = 0
+    degraded_batches: int = 0
+    quarantined_batches: int = 0
+    quarantine_ticks: int = 0
+    crashes: int = 0
+    jobs_failed: int = 0
 
     def summary(self) -> str:
         parts = [

@@ -13,6 +13,12 @@ points:
   (exact: every lost block failed its first transmission too).
 * **conservation under random mesh configs** — no transport-block job is
   lost or duplicated by the mesh closed loop, whatever the topology.
+* **conservation under random fault schedules** — the supervised mesh
+  (:class:`~repro.serve.supervisor.Supervisor`) keeps the invariant
+  exact (finalized + queued + failed == submitted) and completes its
+  run under any :meth:`FaultPlan.seeded` schedule — NaN bursts, slot
+  corruption, step errors, stragglers, and cell crashes; after a full
+  drain the residual BLER still never exceeds first-tx BLER.
 
 A small deterministic core (fixed combos sampled from the same space)
 always runs in tier-1 — even without hypothesis installed.  The
@@ -30,7 +36,7 @@ from repro.kernels import ref, rx_fused
 from repro.phy import link as _link
 from repro.phy.link import build_pipeline
 from repro.phy.scenarios import get_scenario
-from repro.serve import MeshSlotScheduler, SlotScheduler
+from repro.serve import FaultPlan, MeshSlotScheduler, SlotScheduler, Supervisor
 
 try:
     from hypothesis import HealthCheck, given, settings
@@ -137,6 +143,51 @@ def _check_mesh_conservation(n_cells: int, arrival_rate: float,
     assert ids == list(range(sch.jobs_submitted)), "job lost"
 
 
+FAULT_RATE_SETS = (
+    {},  # empty schedule: the supervisor must be a no-op
+    {"nan_llr": 0.5, "corrupt_slot": 0.5},
+    {"step_error": 0.6, "straggler": 0.4},
+    {"cell_crash": 1.0, "nan_llr": 0.3, "step_error": 0.3},
+    {k: 0.4 for k in ("nan_llr", "corrupt_slot", "step_error",
+                      "straggler", "cell_crash")},
+)
+
+
+def _check_supervised_fault_conservation(n_cells: int, rates: dict,
+                                         max_retx: int, seed: int,
+                                         n_ticks: int = 4) -> None:
+    """The supervised mesh completes any seeded fault schedule with the
+    conservation invariant exact, drains afterwards, and HARQ can still
+    only recover blocks (residual <= first-tx)."""
+    plan = FaultPlan.seeded(seed, n_ticks, n_cells, rates, max_seq=2)
+    sch = Supervisor.uniform(
+        "fz-ladder", n_cells, fault_plan=plan, n_users=2,
+        arrival_rate=0.8, batch_size=2, max_retx=max_retx,
+        max_step_retries=1, quarantine_faults=1, quarantine_ttis=1,
+        probation_ttis=1, checkpoint_every=1, adapt=False, seed=seed,
+    )
+    sch.run(n_ticks)
+
+    def ids():
+        return sorted(sch.finalized_job_ids() + sch.queued_job_ids()
+                      + sch.failed_job_ids())
+
+    assert len(ids()) == len(set(ids())), "job duplicated under faults"
+    assert ids() == list(range(sch.jobs_submitted)), "job lost"
+    for loop in sch.loops:
+        loop.arrival_rate = 0.0
+    for _ in range(64):
+        if sch.backlog == 0:
+            break
+        sch.tick()
+    rep = sch.report()
+    assert rep.backlog_left == 0, "supervised mesh failed to drain"
+    assert rep.harq_open == 0, "HARQ buffers leaked under faults"
+    assert ids() == list(range(sch.jobs_submitted)), "job lost in drain"
+    if rep.first_tx_bler is not None and rep.residual_bler is not None:
+        assert rep.residual_bler <= rep.first_tx_bler + 1e-12
+
+
 def _fz_ladder():
     """One small registered ladder for the mesh-conservation fuzz."""
     from repro.phy.scenarios import (
@@ -183,6 +234,13 @@ def test_core_mesh_conservation():
     _fz_ladder()
     _check_mesh_conservation(
         n_cells=3, arrival_rate=0.8, cap=1, max_retx=1, seed=3
+    )
+
+
+def test_core_supervised_fault_conservation():
+    _fz_ladder()
+    _check_supervised_fault_conservation(
+        n_cells=2, rates=FAULT_RATE_SETS[4], max_retx=1, seed=5
     )
 
 
@@ -243,6 +301,20 @@ if HAVE_HYPOTHESIS:
         _fz_ladder()
         _check_mesh_conservation(
             n_cells, arrival_rate, cap, max_retx, seed % 97
+        )
+
+    @CI_PROFILE
+    @given(
+        n_cells=st.integers(min_value=1, max_value=3),
+        rates=st.sampled_from(FAULT_RATE_SETS),
+        max_retx=st.integers(min_value=0, max_value=2),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_fuzz_supervised_fault_conservation(n_cells, rates,
+                                                max_retx, seed):
+        _fz_ladder()
+        _check_supervised_fault_conservation(
+            n_cells, rates, max_retx, seed % 97
         )
 
     @pytest.mark.slow

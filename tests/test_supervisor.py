@@ -1,0 +1,428 @@
+"""Fault-tolerant serving: the supervised mesh runtime and fault layer.
+
+The supervisor's correctness claims are exactness claims, so the tests
+check them as identities, not tendencies:
+
+* **zero-fault identity** — under :meth:`FaultPlan.none` a supervised
+  run is field-for-field identical to an unsupervised run of the same
+  seed (wall-clock fields aside): the supervision layer consumes no
+  randomness and mutates nothing.
+* **transparent recovery** — a transient staged-tensor corruption
+  (degraded to the fp32 reference step) or a retried step exception
+  leaves the *entire trajectory* identical to the clean run.
+* **conservation through faults** — finalized + queued + failed ==
+  submitted, exactly once each, under retry escalation, watchdog
+  deferral, quarantine, and cell crashes.
+* **lossless crash recovery** — with per-tick checkpoints, a crashed
+  cell restores (HARQ combined-LLR buffers, OLLA, queues, RNG stream)
+  to an identical trajectory; with stale checkpoints the lost-window
+  jobs are finalized as failed, never silently dropped.
+* **checkpoint round-trip** — a run snapshotted mid-flight (open HARQ
+  processes included) and resumed in a fresh scheduler is
+  field-for-field identical to the uninterrupted run.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.kernels.tune import TuneCache
+from repro.phy.scenarios import (
+    MCSLadder,
+    get_ladder,
+    get_scenario,
+    register_ladder,
+    register_scenario,
+)
+from repro.serve import (
+    FaultEvent,
+    FaultPlan,
+    MeshSlotScheduler,
+    Supervisor,
+    closed_cell,
+    make_traffic,
+    restore_cell_loop,
+    snapshot_cell_loop,
+    stack_slots,
+    validate_slots,
+)
+
+_SMOKE = dict(n_subcarriers=64, fft_size=64, n_taps=4, delay_spread=1.0)
+
+# wall-clock-dependent report fields; everything else must be bit-equal
+_WALL_FIELDS = {"wall_s", "slots_per_sec", "goodput_bits_per_sec"}
+
+# fault-accounting fields: stripped only when comparing a faulted
+# supervised run against a clean baseline (the *trajectory* must match;
+# the accounting by construction differs)
+_FAULT_MESH_FIELDS = {
+    "faults_injected", "step_retries", "degraded_batches",
+    "quarantined_batches", "batches_deferred", "ticks_over_budget",
+    "cell_quarantines", "crashes", "recoveries", "jobs_failed",
+}
+_FAULT_CELL_FIELDS = {
+    "faults", "degraded_batches", "quarantined_batches",
+    "quarantine_ticks", "crashes", "jobs_failed",
+}
+
+
+def _small(name: str, new: str, **kw):
+    """Small-grid clone of a registered coded scenario (idempotent)."""
+    try:
+        return get_scenario(new)
+    except KeyError:
+        pass
+    s = get_scenario(name).replace(name=new, **kw)
+    s = s.replace(grid=dataclasses.replace(s.grid, **_SMOKE))
+    return register_scenario(s)
+
+
+def _ladder():
+    _small("siso-qpsk-r12-snr8", "mcl-qpsk-r12")
+    _small("siso-qam16-r12-snr15", "mcl-qam16-r12")
+    try:
+        return get_ladder("mcl-siso")
+    except KeyError:
+        return register_ladder(
+            MCSLadder("mcl-siso", ("mcl-qpsk-r12", "mcl-qam16-r12"))
+        )
+
+
+def _strip(rep, faults: bool = False) -> dict:
+    d = dataclasses.asdict(rep)
+    drop = _WALL_FIELDS | (_FAULT_MESH_FIELDS if faults else set())
+    for k in drop:
+        d.pop(k, None)
+    cdrop = _WALL_FIELDS | (_FAULT_CELL_FIELDS if faults else set())
+    for c in d["cells"].values():
+        for k in cdrop:
+            c.pop(k, None)
+    return d
+
+
+def _assert_conservation(sch):
+    finalized = sch.finalized_job_ids()
+    queued = sch.queued_job_ids()
+    failed = list(sch.failed_job_ids()) if hasattr(
+        sch, "failed_job_ids") else []
+    ids = sorted(finalized + queued + failed)
+    assert len(ids) == len(set(ids)), "transport-block job duplicated"
+    assert ids == list(range(sch.jobs_submitted)), (
+        f"conservation violated: {sch.jobs_submitted} submitted, "
+        f"{len(finalized)} finalized + {len(queued)} queued + "
+        f"{len(failed)} failed"
+    )
+
+
+def _drain(sch, max_ticks: int = 64):
+    """Stop arrivals, lift the cap and the watchdog, tick until empty."""
+    for loop in sch.loops:
+        loop.arrival_rate = 0.0
+        loop.max_batches_per_tick = None
+    if hasattr(sch, "watchdog_s"):
+        sch.watchdog_s = None
+    for _ in range(max_ticks):
+        if sch.backlog == 0:
+            return
+        sch.tick()
+    raise AssertionError(f"mesh did not drain: backlog={sch.backlog}")
+
+
+_KW = dict(n_users=2, arrival_rate=0.8, batch_size=2, max_retx=2,
+           adapt=False, seed=11)
+
+
+# -- zero-fault identity ----------------------------------------------------
+
+def test_zero_fault_supervised_run_is_identical():
+    _ladder()
+    base = MeshSlotScheduler.uniform("mcl-siso", 3, **_KW)
+    sup = Supervisor.uniform(
+        "mcl-siso", 3, fault_plan=FaultPlan.none(), **_KW
+    )
+    # fault fields are NOT stripped: they must be zero on both sides
+    a, b = _strip(base.run(5)), _strip(sup.run(5))
+    assert a == b
+    _assert_conservation(sup)
+
+
+# -- transparent recovery ---------------------------------------------------
+
+def test_stage_corruption_degrades_to_reference_and_recovers():
+    _ladder()
+    plan = FaultPlan([
+        FaultEvent("nan_llr", tick=1, seq=0, cell=0),
+        FaultEvent("corrupt_slot", tick=2, seq=0, cell=1),
+    ])
+    sup = Supervisor.uniform("mcl-siso", 3, fault_plan=plan, **_KW)
+    rep = sup.run(5)
+    assert rep.faults_injected == 2
+    # both corruptions propagated to non-finite outputs, tripped the
+    # guard, and the fp32 reference rerun recovered the lane
+    assert rep.degraded_batches == 2
+    assert sum(c.degraded_batches for c in rep.cells.values()) == 2
+    assert rep.quarantined_batches == 0 and rep.crashes == 0
+    # the recovered trajectory is *identical* to a clean run: same CRCs,
+    # same HARQ walk, same OLLA, same delivered bits
+    base = MeshSlotScheduler.uniform("mcl-siso", 3, **_KW)
+    assert _strip(base.run(5), faults=True) == _strip(rep, faults=True)
+    _assert_conservation(sup)
+
+
+def test_step_error_is_retried_transparently():
+    _ladder()
+    plan = FaultPlan([FaultEvent("step_error", tick=1, seq=0)])
+    sup = Supervisor.uniform("mcl-siso", 2, fault_plan=plan, **_KW)
+    rep = sup.run(4)
+    assert rep.faults_injected == 1
+    assert rep.step_retries == 1
+    assert rep.quarantined_batches == 0
+    base = MeshSlotScheduler.uniform("mcl-siso", 2, **_KW)
+    assert _strip(base.run(4), faults=True) == _strip(rep, faults=True)
+    _assert_conservation(sup)
+
+
+def test_step_error_escalation_quarantines_bucket():
+    _ladder()
+    # four stacked failures at the same bucket outlast max_step_retries=1
+    plan = FaultPlan([FaultEvent("step_error", tick=1, seq=0)] * 4)
+    sup = Supervisor.uniform(
+        "mcl-siso", 2, fault_plan=plan, max_step_retries=1,
+        quarantine_faults=1, **_KW,
+    )
+    rep = sup.run(4)
+    assert rep.step_retries == 1
+    assert rep.quarantined_batches >= 1
+    assert rep.cell_quarantines >= 1
+    # the bucket's jobs were requeued, not lost: conservation is exact
+    # and after the quarantine lifts everything still finalizes
+    _assert_conservation(sup)
+    _drain(sup)
+    _assert_conservation(sup)
+    assert sorted(sup.finalized_job_ids() + sup.failed_job_ids()) == \
+        list(range(sup.jobs_submitted))
+    assert sup.harq_open == 0
+
+
+# -- watchdog deferral ------------------------------------------------------
+
+def test_straggler_trips_watchdog_and_defers_not_sheds():
+    _ladder()
+    # two init_mcs values => two step buckets per tick; the straggler in
+    # bucket 0 blows the TTI budget so bucket 1 is deferred (its jobs go
+    # back to the queue heads — HARQ state untouched, nothing shed)
+    specs = [
+        closed_cell("w0", "mcl-siso", n_users=2, arrival_rate=0.8,
+                    init_mcs=0),
+        closed_cell("w1", "mcl-siso", n_users=2, arrival_rate=0.8,
+                    init_mcs=1),
+    ]
+    plan = FaultPlan([
+        FaultEvent("straggler", tick=t, seq=0, magnitude=0.05)
+        for t in (1, 2, 3)
+    ])
+    sup = Supervisor(
+        specs, fault_plan=plan, watchdog_s=0.02,
+        batch_size=2, max_retx=2, adapt=False, seed=13,
+    )
+    rep = sup.run(4)
+    assert rep.faults_injected >= 1
+    assert rep.ticks_over_budget >= 1
+    assert rep.batches_deferred >= 1
+    assert rep.jobs_shed == 0
+    _assert_conservation(sup)
+    # deferred work is only delayed: with the watchdog lifted the mesh
+    # drains completely and frees every HARQ buffer
+    _drain(sup)
+    _assert_conservation(sup)
+    assert sorted(sup.finalized_job_ids()) == \
+        list(range(sup.jobs_submitted))
+    assert sup.harq_open == 0
+
+
+# -- quarantine lifecycle ---------------------------------------------------
+
+def test_quarantine_then_probation_then_requarantine():
+    _ladder()
+    plan = FaultPlan([
+        FaultEvent("nan_llr", tick=1, seq=0, cell=0),
+        FaultEvent("nan_llr", tick=4, seq=0, cell=0),
+    ])
+    sup = Supervisor.uniform(
+        "mcl-siso", 2, fault_plan=plan, quarantine_faults=1,
+        quarantine_ttis=2, probation_ttis=2,
+        n_users=2, arrival_rate=1.0, batch_size=2, max_retx=2,
+        adapt=False, seed=17,
+    )
+    rep = sup.run(7)
+    # tick 1: fault -> quarantined (ticks 2,3); tick 4: probation, the
+    # second fault re-quarantines immediately (ticks 5,6)
+    assert rep.cells["cell0"].faults == 2
+    assert rep.cell_quarantines == 2
+    assert rep.cells["cell0"].quarantine_ticks == 4
+    assert rep.cells["cell1"].quarantine_ticks == 0
+    # arrivals accrue while quarantined — the cell is muted, not dead
+    assert rep.cells["cell0"].n_arrivals > 0
+    _assert_conservation(sup)
+
+
+# -- crash recovery ---------------------------------------------------------
+
+def test_cell_crash_recovers_losslessly_from_checkpoint():
+    _ladder()
+    plan = FaultPlan([FaultEvent("cell_crash", tick=3, cell=1)])
+    base = MeshSlotScheduler.uniform("mcl-siso", 3, **_KW)
+    sup = Supervisor.uniform(
+        "mcl-siso", 3, fault_plan=plan, checkpoint_every=1, **_KW
+    )
+    a = _strip(base.run(6), faults=True)
+    rep = sup.run(6)
+    # per-tick checkpoints make the crash lossless: the restored cell
+    # (HARQ combined-LLR buffers, OLLA offsets, queues, RNG stream)
+    # replays the exact clean trajectory
+    assert _strip(rep, faults=True) == a
+    assert rep.crashes == 1 and rep.recoveries == 1
+    assert rep.jobs_failed == 0
+    assert rep.cells["cell1"].crashes == 1
+    _assert_conservation(sup)
+
+
+def test_crash_with_stale_checkpoint_fails_lost_window_jobs():
+    _ladder()
+    plan = FaultPlan([FaultEvent("cell_crash", tick=3, cell=0)])
+    sup = Supervisor.uniform(
+        "mcl-siso", 2, fault_plan=plan, checkpoint_every=8,
+        n_users=2, arrival_rate=1.2, batch_size=2, max_retx=2,
+        adapt=False, seed=23,
+    )
+    rep = sup.run(5)
+    assert rep.crashes == 1 and rep.recoveries == 1
+    # only the construction-time checkpoint existed: jobs that lived
+    # solely in the lost window are finalized as failed, not dropped
+    assert rep.jobs_failed > 0
+    assert rep.jobs_failed == len(sup.failed_job_ids())
+    assert rep.cells["cell0"].jobs_failed == rep.jobs_failed
+    _assert_conservation(sup)
+    _drain(sup)
+    _assert_conservation(sup)
+    assert sorted(sup.finalized_job_ids() + sup.failed_job_ids()) == \
+        list(range(sup.jobs_submitted))
+    assert sup.harq_open == 0
+
+
+# -- checkpoint round-trip (mid-run, open HARQ) -----------------------------
+
+def test_checkpoint_roundtrip_resumes_identically(tmp_path):
+    _ladder()
+    kw = dict(_KW)
+    # below the operating point so HARQ processes are open mid-run
+    kw["snr_db"] = get_scenario("mcl-qpsk-r12").snr_db - 3.0
+    full = MeshSlotScheduler.uniform("mcl-siso", 2, **kw)
+    a = _strip(full.run(6))
+
+    first = MeshSlotScheduler.uniform("mcl-siso", 2, **kw)
+    first.run(3)
+    assert first.harq_open > 0, (
+        "snapshot must cover in-flight HARQ combining state"
+    )
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(3, {loop.name: snapshot_cell_loop(loop)
+                 for loop in first.loops})
+
+    resumed = MeshSlotScheduler.uniform("mcl-siso", 2, **kw)
+    flat = mgr.load_flat(3)
+    for loop in resumed.loops:
+        prefix = loop.name + "/"
+        restore_cell_loop(loop, {
+            k[len(prefix):]: v for k, v in flat.items()
+            if k.startswith(prefix)
+        })
+    resumed.now = first.now
+    resumed.job_counter.n = first.job_counter.n
+    resumed.n_steps = first.n_steps
+    resumed.n_real_lanes = first.n_real_lanes
+    resumed.n_filler_lanes = first.n_filler_lanes
+    b = _strip(resumed.run(3))
+    assert a == b
+    _assert_conservation(resumed)
+
+
+def test_snapshot_restore_cell_loop_is_exact():
+    _ladder()
+    kw = dict(_KW)
+    kw["snr_db"] = get_scenario("mcl-qpsk-r12").snr_db - 3.0
+    sch = MeshSlotScheduler.uniform("mcl-siso", 1, **kw)
+    sch.run(3)
+    src = sch.loops[0]
+    flat = snapshot_cell_loop(src)
+
+    dst = sch._make_loop(0)
+    restore_cell_loop(dst, flat)
+    assert dst.now == src.now
+    assert dst.finalized_jobs == src.finalized_jobs
+    assert dst.rng.bit_generator.state == src.rng.bit_generator.state
+    assert len(dst.users) == len(src.users)
+    for ud, us in zip(dst.users, src.users):
+        assert (ud.user_id, ud.mcs) == (us.user_id, us.mcs)
+        assert ud.snr_db == us.snr_db and ud.olla == us.olla
+        assert len(ud.backlog) == len(us.backlog)
+        for jd, js in zip(ud.backlog, us.backlog):
+            assert (jd.enq_tick, jd.job_id) == (js.enq_tick, js.job_id)
+            assert (jd.harq is None) == (js.harq is None)
+            if js.harq is not None:
+                np.testing.assert_array_equal(jd.harq.prior,
+                                              js.harq.prior)
+                np.testing.assert_array_equal(jd.harq.info,
+                                              js.harq.info)
+                np.testing.assert_array_equal(jd.harq.acked,
+                                              js.harq.acked)
+                assert (jd.harq.n_tx, jd.harq.rv) == \
+                    (js.harq.n_tx, js.harq.rv)
+
+
+# -- slot validation (satellite) --------------------------------------------
+
+def test_validate_slots_names_offending_key_and_slot():
+    scn = _small("siso-qpsk-r12-snr8", "mcl-qpsk-r12")
+    slots = make_traffic(scn, 17, 3)
+    validate_slots(slots)  # clean batch passes
+
+    short = dict(slots[1])
+    short["y"] = np.asarray(short["y"])[..., :-1]
+    with pytest.raises(ValueError, match=r"slot 1 key 'y'"):
+        validate_slots([slots[0], short])
+    with pytest.raises(ValueError, match=r"slot 1 key 'y'"):
+        stack_slots([slots[0], short])
+
+    missing = dict(slots[2])
+    missing.pop("y")
+    with pytest.raises(ValueError, match=r"missing \['y'\]"):
+        validate_slots([slots[0], slots[1], missing])
+
+    wrong = dict(slots[1])
+    wrong["y"] = np.asarray(wrong["y"], np.complex128)
+    with pytest.raises(ValueError, match=r"dtype complex128"):
+        validate_slots([slots[0], wrong])
+
+
+# -- autotune cache robustness (satellite) ----------------------------------
+
+def test_tune_cache_tolerates_corruption_and_saves_atomically(tmp_path):
+    path = tmp_path / "tune_cache.json"
+    path.write_text('{"version": 1, "entries": {truncated garbage')
+    cache = TuneCache(str(path))
+    # corrupt file reads as an empty cache, never raises
+    assert cache.lookup("anything") is None
+
+    cache.store("op|shape|dtype|cpu", (64, 128), us=12.5, n_candidates=4)
+    # the save replaced the corrupt file atomically: valid json, no
+    # leftover tmp files in the directory
+    data = json.loads(path.read_text())
+    assert data["entries"]["op|shape|dtype|cpu"]["choice"] == [64, 128]
+    assert os.listdir(tmp_path) == [path.name]
+
+    fresh = TuneCache(str(path))
+    assert fresh.lookup("op|shape|dtype|cpu") == (64, 128)
