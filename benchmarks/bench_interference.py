@@ -1,0 +1,231 @@
+"""Multi-user interference benchmark: SIC vs LMMSE, interference and
+aging sweeps, and the 256-QAM rung.
+
+Four sweeps over the widened scenario space:
+
+* **sic_vs_lmmse** — the near-far MU-MIMO operating point
+  (``mimo4x4-qam16-mu-snr18``, 4 users strongest-first) served by the
+  joint-LMMSE fused receiver vs the staged-SIC fused receiver, across
+  SNR.  The acceptance gate requires SIC sum-goodput strictly above
+  LMMSE at at least one swept point.
+* **interference** — the co-channel point
+  (``mimo2x2-qam16-r12-intf-snr20``) across interferer power, plus the
+  clean baseline.  Gate: BLER monotone non-decreasing in interference
+  power (within sampling slack).
+* **aging** — the high-Doppler point across ``doppler_rho``.
+* **qam256** — the 256-QAM rung at and above its operating point.
+
+Standalone runs write ``experiments/phy/interference.json``, from which
+``scripts/make_experiments_md.py`` regenerates docs/EXPERIMENTS.md.
+
+Flags:
+  --smoke   one SIC-vs-LMMSE point + a short interference monotonicity
+            sweep + the fuzzer's core kernel invariants (fused LMMSE and
+            SIC LLR signs vs their oracles) — the CI interference gate;
+            writes no JSON.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, emit_json
+from repro.kernels import ref, rx_fused
+from repro.phy import build_pipeline, coding
+from repro.phy import link as _link
+from repro.phy.scenarios import get_scenario
+
+JSON_PATH = "experiments/phy/interference.json"
+MU_POINT = "mimo4x4-qam16-mu-snr18"
+INTF_POINT = "mimo2x2-qam16-r12-intf-snr20"
+AGING_POINT = "siso-qam16-r12-aging-snr18"
+QAM256_POINT = "siso-qam256-r34-snr28"
+
+BATCH = 8
+SEED = 7
+SIC_SNRS = (18.0, 20.0, 22.0)
+INTF_POWERS = (None, -18.0, -12.0, -6.0, 0.0)  # None = clean baseline
+AGING_RHOS = (1.0, 0.97, 0.92)
+MONOTONE_SLACK = 0.1
+
+
+def _run(scn, slot, **build_kw) -> dict:
+    pipe = build_pipeline("classical", scn, **build_kw)
+    state = pipe.run(dict(slot))
+    bler = float(1.0 - jnp.mean(state["crc_ok"].astype(jnp.float32)))
+    return {
+        "bler": round(bler, 4),
+        "goodput_kbits_per_slot": round(
+            (1.0 - bler) * coding.info_bits_per_slot(scn) / 1e3, 3
+        ),
+    }
+
+
+def bench_sic_vs_lmmse(snrs=SIC_SNRS, batch: int = BATCH) -> list:
+    points = []
+    base = get_scenario(MU_POINT)
+    for snr in snrs:
+        scn = base.replace(name=f"{MU_POINT}@{snr}", snr_db=snr)
+        slot = scn.make_batch(jax.random.PRNGKey(SEED), batch)
+        lmmse = _run(scn, slot, fused=True)
+        sic = _run(scn, slot, sic=True)
+        point = {
+            "snr_db": snr,
+            "users": scn.n_users,
+            "user_power_db": list(scn.user_power_db),
+            "lmmse_bler": lmmse["bler"],
+            "sic_bler": sic["bler"],
+            "lmmse_goodput_kbits_per_slot": lmmse["goodput_kbits_per_slot"],
+            "sic_goodput_kbits_per_slot": sic["goodput_kbits_per_slot"],
+        }
+        points.append(point)
+        emit(
+            f"interference/sic_vs_lmmse@{snr}dB", 0.0,
+            f"lmmse={lmmse['goodput_kbits_per_slot']}kbit/slot "
+            f"sic={sic['goodput_kbits_per_slot']}kbit/slot "
+            f"(bler {lmmse['bler']} -> {sic['bler']})",
+        )
+    return points
+
+
+def bench_interference_sweep(powers=INTF_POWERS,
+                             batch: int = BATCH) -> list:
+    points = []
+    base = get_scenario(INTF_POINT)
+    for p in powers:
+        intf = () if p is None else (p,)
+        scn = base.replace(name=f"{INTF_POINT}@{p}", interferer_db=intf)
+        slot = scn.make_batch(jax.random.PRNGKey(SEED), batch)
+        res = _run(scn, slot, fused=True)
+        points.append({"interferer_db": p, **res})
+        emit(
+            f"interference/cochannel@{p}dB", 0.0,
+            f"bler={res['bler']} "
+            f"goodput={res['goodput_kbits_per_slot']}kbit/slot",
+        )
+    return points
+
+
+def bench_aging_sweep(rhos=AGING_RHOS, batch: int = BATCH) -> list:
+    points = []
+    base = get_scenario(AGING_POINT)
+    for rho in rhos:
+        scn = base.replace(name=f"{AGING_POINT}@{rho}", doppler_rho=rho)
+        slot = scn.make_batch(jax.random.PRNGKey(SEED), batch)
+        res = _run(scn, slot, fused=True)
+        points.append({"doppler_rho": rho, **res})
+        emit(f"interference/aging@rho{rho}", 0.0, f"bler={res['bler']}")
+    return points
+
+
+def bench_qam256(batch: int = BATCH) -> list:
+    points = []
+    base = get_scenario(QAM256_POINT)
+    for off in (0.0, 4.0):
+        scn = base.replace(name=f"{QAM256_POINT}+{off}",
+                           snr_db=base.snr_db + off)
+        slot = scn.make_batch(jax.random.PRNGKey(SEED), batch)
+        res = _run(scn, slot, fused=True)
+        points.append({"snr_db": scn.snr_db, **res})
+        emit(f"interference/qam256@{scn.snr_db}dB", 0.0,
+             f"bler={res['bler']}")
+    return points
+
+
+# -- gates ------------------------------------------------------------------
+
+def gate_sic_gain(points: list) -> float:
+    """SIC sum-goodput strictly above LMMSE at >= 1 swept point, and
+    never materially below it anywhere."""
+    best = 0.0
+    for p in points:
+        gain = (p["sic_goodput_kbits_per_slot"]
+                - p["lmmse_goodput_kbits_per_slot"])
+        assert p["sic_bler"] <= p["lmmse_bler"] + MONOTONE_SLACK, p
+        best = max(best, gain)
+    assert best > 0.0, f"SIC never beat LMMSE: {points}"
+    return best
+
+
+def gate_interference_monotone(points: list) -> None:
+    """BLER non-decreasing in interference power (clean point first)."""
+    blers = [p["bler"] for p in points]
+    for weak, strong in zip(blers, blers[1:]):
+        assert strong >= weak - MONOTONE_SLACK, points
+
+
+def gate_kernel_invariants() -> None:
+    """The fuzzer's core kernel invariants at the benchmark's operating
+    point: fused LMMSE and SIC paths match their unfused oracles on
+    >= 99% of LLR signs."""
+    scn = get_scenario(MU_POINT)
+    slot = scn.make_batch(jax.random.PRNGKey(SEED), 2)
+    h = jnp.mean(slot["h"], axis=1)
+    for fused, oracle, tag in (
+        (rx_fused.mmse_detect_demap, ref.mmse_detect_demap_ref, "lmmse"),
+        (rx_fused.sic_detect_demap, ref.sic_detect_demap_ref, "sic"),
+    ):
+        _, _, llr_f = fused(slot["y"], h, slot["noise_var"], scn.modem,
+                            use_pallas=False)
+        _, _, llr_r = oracle(slot["y"], h, slot["noise_var"], scn.modem)
+        agree = float(jnp.mean((llr_f > 0) == (llr_r > 0)))
+        assert agree >= 0.99, (tag, agree)
+
+
+def smoke_gates():
+    """CI gates: SIC beats LMMSE at one operating point, co-channel BLER
+    monotone over a short sweep, kernel oracles agree."""
+    gate_kernel_invariants()
+    sic_points = bench_sic_vs_lmmse(snrs=(18.0,), batch=BATCH)
+    gain = gate_sic_gain(sic_points)
+    intf_points = bench_interference_sweep(powers=(None, -12.0, 0.0),
+                                           batch=4)
+    gate_interference_monotone(intf_points)
+    print(
+        f"smoke ok: sic gain {gain:.3f}kbit/slot at "
+        f"{sic_points[0]['snr_db']}dB, interference monotone over "
+        f"{len(intf_points)} points, kernel oracles agree"
+    )
+
+
+def main(json_default: str = ""):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=json_default,
+                    help="output JSON path ('' disables)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: SIC-vs-LMMSE gain at one point + "
+                         "interference monotonicity + kernel oracle "
+                         "agreement, no JSON")
+    args, _ = ap.parse_known_args()
+
+    if args.smoke:
+        smoke_gates()
+        return
+
+    sic_points = bench_sic_vs_lmmse()
+    gain = gate_sic_gain(sic_points)
+    intf_points = bench_interference_sweep()
+    gate_interference_monotone(intf_points)
+    aging_points = bench_aging_sweep()
+    qam_points = bench_qam256()
+    gate_kernel_invariants()
+    print(f"gates ok (best sic gain {gain:.3f}kbit/slot)")
+
+    if args.json:
+        emit_json(args.json, {
+            "bench": "interference",
+            "batch": BATCH,
+            "seed": SEED,
+            "mu_point": MU_POINT,
+            "sic_vs_lmmse": sic_points,
+            "intf_point": INTF_POINT,
+            "interference": intf_points,
+            "aging_point": AGING_POINT,
+            "aging": aging_points,
+            "qam256_point": QAM256_POINT,
+            "qam256": qam_points,
+        })
+
+
+if __name__ == "__main__":
+    main(json_default=JSON_PATH)

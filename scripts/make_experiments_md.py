@@ -15,6 +15,9 @@ Sources -> targets:
                                      closed-loop sweep)
   experiments/phy/faults.json     -> docs/EXPERIMENTS.md  (fault-rate
                                      graceful-degradation sweep)
+  experiments/phy/interference.json
+                                  -> docs/EXPERIMENTS.md  (SIC-vs-LMMSE,
+                                     co-channel, aging/256-QAM tables)
   repro.phy.scenarios registry    -> docs/SCENARIOS.md    (scenario table)
   repro.phy.scenarios ladders     -> docs/SERVING.md      (MCS-ladder table)
   experiments/dryrun/*.json       -> EXPERIMENTS.md       (legacy LM tables,
@@ -44,6 +47,7 @@ PHY_HARQ = "experiments/phy/harq.json"
 PHY_PRECISION = "experiments/phy/precision.json"
 PHY_MESH_CL = "experiments/phy/mesh_closed_loop.json"
 PHY_FAULTS = "experiments/phy/faults.json"
+PHY_INTERFERENCE = "experiments/phy/interference.json"
 
 
 def load_dryrun(d):
@@ -429,14 +433,72 @@ def faults_table(data):
     return "\n".join(rows)
 
 
+# -- interference / MU-MIMO tables (docs/EXPERIMENTS.md) --------------------
+
+def interference_sic_table(data):
+    """SIC vs joint LMMSE on the near-far MU-MIMO point, across SNR."""
+    rows = [
+        "| SNR dB | users (power dB) | LMMSE BLER | SIC BLER | LMMSE kbit/slot | SIC kbit/slot | SIC gain |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for p in data["sic_vs_lmmse"]:
+        powers = ", ".join(f"{v:g}" for v in p["user_power_db"])
+        gain = (p["sic_goodput_kbits_per_slot"]
+                - p["lmmse_goodput_kbits_per_slot"])
+        rows.append(
+            f"| {p['snr_db']:g} | {p['users']} ({powers}) | "
+            f"{p['lmmse_bler']:.4f} | {p['sic_bler']:.4f} | "
+            f"{p['lmmse_goodput_kbits_per_slot']} | "
+            f"{p['sic_goodput_kbits_per_slot']} | {gain:+.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def interference_cochannel_table(data):
+    """Coded BLER / goodput vs co-channel interferer power."""
+    rows = [
+        "| interferer dB | coded BLER | goodput kbit/slot |",
+        "|---|---|---|",
+    ]
+    for p in data["interference"]:
+        power = ("— (clean)" if p["interferer_db"] is None
+                 else f"{p['interferer_db']:g}")
+        rows.append(
+            f"| {power} | {p['bler']:.4f} | "
+            f"{p['goodput_kbits_per_slot']} |"
+        )
+    return "\n".join(rows)
+
+
+def interference_aging_table(data):
+    """Coded BLER vs channel aging, plus the 256-QAM rung points."""
+    rows = [
+        "| sweep | point | coded BLER | goodput kbit/slot |",
+        "|---|---|---|---|",
+    ]
+    for i, p in enumerate(data["aging"]):
+        name = "Doppler aging" if i == 0 else ""
+        rows.append(
+            f"| {name} | ρ = {p['doppler_rho']:g} | {p['bler']:.4f} | "
+            f"{p['goodput_kbits_per_slot']} |"
+        )
+    for i, p in enumerate(data["qam256"]):
+        name = "256-QAM rung" if i == 0 else ""
+        rows.append(
+            f"| {name} | {p['snr_db']:g} dB | {p['bler']:.4f} | "
+            f"{p['goodput_kbits_per_slot']} |"
+        )
+    return "\n".join(rows)
+
+
 # -- scenario catalogue (docs/SCENARIOS.md) ---------------------------------
 
 def scenario_table():
     from repro.phy.scenarios import all_scenarios
 
     rows = [
-        "| name | modulation | code | MIMO (tx×rx) | grid (sym×sc) | DMRS | SNR dB | Doppler ρ | description |",
-        "|---|---|---|---|---|---|---|---|---|",
+        "| name | modulation | code | MIMO (tx×rx) | users (power dB) | interf dB | grid (sym×sc) | DMRS | SNR dB | Doppler ρ | description |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for s in all_scenarios():
         g = s.grid
@@ -444,8 +506,14 @@ def scenario_table():
                 + (f", {g.n_tx} combs" if g.n_tx > 1 else ""))
         code = (f"LDPC r={s.code.rate:g} ({s.code.k},{s.code.e_bits})"
                 if s.code else "—")
+        users = ("1" if s.user_power_db is None else
+                 f"{s.n_users} ("
+                 + ", ".join(f"{v:g}" for v in s.user_power_db) + ")")
+        intf = (", ".join(f"{v:g}" for v in s.interferer_db)
+                if s.interferer_db else "—")
         rows.append(
             f"| `{s.name}` | {s.modulation} | {code} | {g.n_tx}×{g.n_rx} | "
+            f"{users} | {intf} | "
             f"{g.n_symbols}×{g.n_subcarriers} | {dmrs} | {s.snr_db:g} | "
             f"{s.doppler_rho:g} | {s.description} |"
         )
@@ -553,6 +621,16 @@ def targets():
                 fl = json.load(f)
             sections += [
                 ("faults-table", faults_table(fl)),
+            ]
+        if os.path.exists(PHY_INTERFERENCE):
+            with open(PHY_INTERFERENCE) as f:
+                itf = json.load(f)
+            sections += [
+                ("interference-sic-table", interference_sic_table(itf)),
+                ("interference-cochannel-table",
+                 interference_cochannel_table(itf)),
+                ("interference-aging-table",
+                 interference_aging_table(itf)),
             ]
         if sections:
             out.append(("docs/EXPERIMENTS.md",

@@ -65,6 +65,45 @@ def mmse_detect_demap_ref(y, h, noise_var, modem):
     return x_hat, nv_eff, modem.demod_llr(x_hat, nv_eff)
 
 
+def sic_detect_demap_ref(y, h, noise_var, modem):
+    """Unfused oracle for the fused SIC equalize→demap kernel: the
+    production staged detector (:func:`repro.phy.classical.
+    mimo_sic_detect_ext` composition) + the modem's max-log demapper,
+    stream by stream — stage ``k`` demaps stream ``k`` from the MMSE
+    solve over the not-yet-cancelled suffix, hard-remodulates it, and
+    subtracts its reconstructed contribution before the next stage.
+
+    y (B, n_sym, n_sc, n_rx), h (B, n_sc, n_rx, n_tx); returns
+    (x_hat, nv_eff, llr) with the fused kernel's shapes (llr
+    (B, n_sym, n_sc, n_tx, bits_per_symbol)).
+    """
+    from repro.phy.classical import mimo_mmse_detect_ext
+
+    b, n_sym, n_sc, n_rx = y.shape
+    n_tx = h.shape[-1]
+    hb = jnp.broadcast_to(
+        h[:, None], (b, n_sym, n_sc, n_rx, n_tx)
+    ).reshape(b * n_sym, n_sc, n_rx, n_tx)
+    y_res = y.reshape(b * n_sym, n_sc, n_rx)
+    xs, nvs, llrs = [], [], []
+    for k in range(n_tx):
+        x_all, nv_all = mimo_mmse_detect_ext(y_res, hb[..., k:], noise_var)
+        x_k, nv_k = x_all[..., 0], nv_all[..., 0]
+        llr_k = modem.demod_llr(x_k, nv_k)
+        xs.append(x_k)
+        nvs.append(nv_k)
+        llrs.append(llr_k)
+        if k < n_tx - 1:
+            hard = (llr_k > 0).astype(jnp.int32)
+            y_res = y_res - hb[..., k] * modem.mod(hard)[..., None]
+    x_hat = jnp.stack(xs, axis=-1).reshape(b, n_sym, n_sc, n_tx)
+    nv_eff = jnp.stack(nvs, axis=-1).reshape(b, n_sym, n_sc, n_tx)
+    llr = jnp.stack(llrs, axis=-2).reshape(
+        b, n_sym, n_sc, n_tx, modem.bits_per_symbol
+    )
+    return x_hat, nv_eff, llr
+
+
 def ls_che_ref(y, pilot_seq, pilot_masks, pilot_stride: int):
     """Mask-and-interp oracle for the fused LS-CHE kernel — the production
     per-(rx, tx) staggered-comb LS + clamped linear interpolation."""

@@ -160,9 +160,92 @@ def _detect_demap_core(yr, yi, hr, hi, nv, levels: Sequence[float],
     return xr, xi, nve, llr
 
 
+def _hard_axis(comp, levels: Sequence[float], scale: float):
+    """Nearest per-axis constellation level of ``comp`` (unit-power
+    domain), unrolled over the static level set — the hard re-modulation
+    of one SIC cancellation stage.  Equivalent to thresholding the
+    per-axis max-log LLRs for gray square QAM."""
+    v = comp * scale
+    best = levels[0] + 0.0 * v
+    best_d = (v - levels[0]) ** 2
+    for lv in levels[1:]:
+        d = (v - lv) ** 2
+        best = jnp.where(d < best_d, lv, best)
+        best_d = jnp.minimum(d, best_d)
+    return best / scale
+
+
+def _sic_core(yr, yi, hr, hi, nv, levels: Sequence[float], norm: float,
+              nb: int):
+    """Successive interference cancellation reusing the in-register MMSE
+    solve of :func:`_detect_demap_core` per stage.
+
+    Stage ``k`` solves the suffix system over streams ``k..n_tx-1``
+    (the Gram/Gauss chain shrinks every stage), keeps stream ``k``'s
+    unbiased estimate + LLRs, hard-remodulates it on the modem grid, and
+    subtracts its reconstructed contribution from the residual — all in
+    the same live-register tile; the residual grids never round-trip.
+    Streams cancel in index order (strongest first by scenario
+    convention).  Same return contract as :func:`_detect_demap_core`.
+    """
+    n_rx, n_tx = len(yr), len(hr[0])
+    scale = float(np.sqrt(norm))
+    yr, yi = list(yr), list(yi)
+    xr_o, xi_o, nve_o, llr_o = [], [], [], []
+    for k in range(n_tx):
+        sub_hr = [[hr[r][t] for t in range(k, n_tx)] for r in range(n_rx)]
+        sub_hi = [[hi[r][t] for t in range(k, n_tx)] for r in range(n_rx)]
+        xr, xi, nve, llr = _detect_demap_core(
+            yr, yi, sub_hr, sub_hi, nv, levels, norm, nb
+        )
+        xr_o.append(xr[0])
+        xi_o.append(xi[0])
+        nve_o.append(nve[0])
+        llr_o.append(llr[0])
+        if k < n_tx - 1:
+            hxr = _hard_axis(xr[0], levels, scale)
+            hxi = _hard_axis(xi[0], levels, scale)
+            for r in range(n_rx):
+                cr, ci = _cmul(hr[r][k], hi[r][k], hxr, hxi)
+                yr[r] = yr[r] - cr
+                yi[r] = yi[r] - ci
+    return xr_o, xi_o, nve_o, llr_o
+
+
 # ---------------------------------------------------------------------------
 # fused equalize -> demap: jnp path (off-TPU fast route)
 # ---------------------------------------------------------------------------
+
+def _demap_jnp(core, y, h, noise_var, modem):
+    """Shared whole-grid jnp driver for the fused demap cores."""
+    n_rx, n_tx = y.shape[-1], h.shape[-1]
+    nb = modem.bits_per_symbol // 2
+    f32 = lambda v: v.astype(jnp.float32)
+    yr = [f32(jnp.real(y[..., r])) for r in range(n_rx)]
+    yi = [f32(jnp.imag(y[..., r])) for r in range(n_rx)]
+    # h broadcasts over the symbol axis — never materialized per-symbol
+    hr = [[f32(jnp.real(h[:, None, :, r, t])) for t in range(n_tx)]
+          for r in range(n_rx)]
+    hi = [[f32(jnp.imag(h[:, None, :, r, t])) for t in range(n_tx)]
+          for r in range(n_rx)]
+    xr, xi, nve, llr = core(
+        yr, yi, hr, hi, noise_var, modem.levels, modem.norm, nb
+    )
+    shape = y.shape[:-1]
+    x_hat = jnp.stack(
+        [jnp.broadcast_to(xr[t] + 1j * xi[t], shape) for t in range(n_tx)],
+        axis=-1,
+    )
+    nv_eff = jnp.stack(
+        [jnp.broadcast_to(nve[t], shape) for t in range(n_tx)], axis=-1
+    )
+    llr_out = jnp.stack(
+        [jnp.stack(
+            [jnp.broadcast_to(b, shape) for b in llr[t]], axis=-1
+        ) for t in range(n_tx)], axis=-2
+    )
+    return x_hat, nv_eff, llr_out
+
 
 def mmse_detect_demap_jnp(
     y: jax.Array,  # (B, n_sym, n_sc, n_rx) complex
@@ -174,28 +257,18 @@ def mmse_detect_demap_jnp(
 
     Returns (x_hat (B, n_sym, n_sc, n_tx), nv_eff, llr (..., n_tx, nb)).
     """
-    n_rx, n_tx = y.shape[-1], h.shape[-1]
-    nb = modem.bits_per_symbol // 2
-    f32 = lambda v: v.astype(jnp.float32)
-    yr = [f32(jnp.real(y[..., r])) for r in range(n_rx)]
-    yi = [f32(jnp.imag(y[..., r])) for r in range(n_rx)]
-    # h broadcasts over the symbol axis — never materialized per-symbol
-    hr = [[f32(jnp.real(h[:, None, :, r, t])) for t in range(n_tx)]
-          for r in range(n_rx)]
-    hi = [[f32(jnp.imag(h[:, None, :, r, t])) for t in range(n_tx)]
-          for r in range(n_rx)]
-    xr, xi, nve, llr = _detect_demap_core(
-        yr, yi, hr, hi, noise_var, modem.levels, modem.norm, nb
-    )
-    shape = y.shape[:-1]
-    x_hat = jnp.stack([xr[t] + 1j * xi[t] for t in range(n_tx)], axis=-1)
-    nv_eff = jnp.stack(
-        [jnp.broadcast_to(nve[t], shape) for t in range(n_tx)], axis=-1
-    )
-    llr_out = jnp.stack(
-        [jnp.stack(llr[t], axis=-1) for t in range(n_tx)], axis=-2
-    )
-    return x_hat, nv_eff, llr_out
+    return _demap_jnp(_detect_demap_core, y, h, noise_var, modem)
+
+
+def sic_detect_demap_jnp(
+    y: jax.Array,  # (B, n_sym, n_sc, n_rx) complex
+    h: jax.Array,  # (B, n_sc, n_rx, n_tx) complex (flat in time)
+    noise_var: jax.Array,
+    modem,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused SIC math on whole grids (see :func:`_sic_core`); same return
+    contract as :func:`mmse_detect_demap_jnp`."""
+    return _demap_jnp(_sic_core, y, h, noise_var, modem)
 
 
 # ---------------------------------------------------------------------------
@@ -204,10 +277,13 @@ def mmse_detect_demap_jnp(
 
 def _detect_demap_kernel(y_ref, h_ref, nv_ref, llr_ref, xh_ref, nve_ref, *,
                          n_rx: int, n_tx: int, n_sym: int,
-                         levels: tuple, norm: float, nb: int):
+                         levels: tuple, norm: float, nb: int,
+                         core=_detect_demap_core):
     """Grid: (batch, sc_tiles).  Blocks: y (2*n_rx, 1, n_sym, bs),
     h (2*n_rx*n_tx, 1, 1, bs) — H broadcasts over symbols inside the tile,
-    the per-symbol h_eff grid never exists."""
+    the per-symbol h_eff grid never exists.  ``core`` picks the fused math
+    (:func:`_detect_demap_core` joint LMMSE or :func:`_sic_core` staged
+    cancellation — same tile I/O either way)."""
     nv = nv_ref[0, 0]
     yr = [y_ref[r, 0] for r in range(n_rx)]  # (n_sym, bs)
     yi = [y_ref[n_rx + r, 0] for r in range(n_rx)]
@@ -215,16 +291,16 @@ def _detect_demap_kernel(y_ref, h_ref, nv_ref, llr_ref, xh_ref, nve_ref, *,
           for r in range(n_rx)]  # (1, bs)
     hi = [[h_ref[(n_rx + r) * n_tx + t, 0] for t in range(n_tx)]
           for r in range(n_rx)]
-    xr, xi, nve, llr = _detect_demap_core(
-        yr, yi, hr, hi, nv, levels, norm, nb
-    )
+    xr, xi, nve, llr = core(yr, yi, hr, hi, nv, levels, norm, nb)
     bs = yr[0].shape[-1]
     for t in range(n_tx):
-        xh_ref[t, 0] = xr[t]
-        xh_ref[n_tx + t, 0] = xi[t]
+        xh_ref[t, 0] = jnp.broadcast_to(xr[t], (n_sym, bs))
+        xh_ref[n_tx + t, 0] = jnp.broadcast_to(xi[t], (n_sym, bs))
         nve_ref[t, 0] = jnp.broadcast_to(nve[t], (n_sym, bs))
         for p in range(2 * nb):
-            llr_ref[t * 2 * nb + p, 0] = llr[t][p]
+            llr_ref[t * 2 * nb + p, 0] = jnp.broadcast_to(
+                llr[t][p], (n_sym, bs)
+            )
 
 
 def _default_block_sc(n_sc: int) -> int:
@@ -234,7 +310,9 @@ def _default_block_sc(n_sc: int) -> int:
     return n_sc
 
 
-def mmse_detect_demap_pallas(
+def _demap_pallas(
+    core,
+    tune_op: str,
     y: jax.Array,  # (B, n_sym, n_sc, n_rx) complex
     h: jax.Array,  # (B, n_sc, n_rx, n_tx) complex
     noise_var: jax.Array,
@@ -250,7 +328,7 @@ def mmse_detect_demap_pallas(
     levels = tuple(float(v) for v in modem.levels)
     if block_sc is None:
         cached = tune.cached_choice(
-            "rx_detect_demap", (n_sym, n_sc, n_rx, n_tx, len(levels))
+            tune_op, (n_sym, n_sc, n_rx, n_tx, len(levels))
         )
         block_sc = (cached[0] if cached and n_sc % cached[0] == 0
                     else _default_block_sc(n_sc))
@@ -270,7 +348,7 @@ def mmse_detect_demap_pallas(
 
     kernel = functools.partial(
         _detect_demap_kernel, n_rx=n_rx, n_tx=n_tx, n_sym=n_sym,
-        levels=levels, norm=float(modem.norm), nb=nb,
+        levels=levels, norm=float(modem.norm), nb=nb, core=core,
     )
     nbits = 2 * nb
     llr_p, xh_p, nve_p = pl.pallas_call(
@@ -308,6 +386,40 @@ def mmse_detect_demap_pallas(
     return x_hat, nv_eff, llr
 
 
+def mmse_detect_demap_pallas(
+    y: jax.Array,  # (B, n_sym, n_sc, n_rx) complex
+    h: jax.Array,  # (B, n_sc, n_rx, n_tx) complex
+    noise_var: jax.Array,
+    modem,
+    *,
+    block_sc: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    return _demap_pallas(
+        _detect_demap_core, "rx_detect_demap", y, h, noise_var, modem,
+        block_sc=block_sc, interpret=interpret,
+    )
+
+
+def sic_detect_demap_pallas(
+    y: jax.Array,  # (B, n_sym, n_sc, n_rx) complex
+    h: jax.Array,  # (B, n_sc, n_rx, n_tx) complex
+    noise_var: jax.Array,
+    modem,
+    *,
+    block_sc: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused SIC equalize→demap as one Pallas pass: every cancellation
+    stage's shrinking Gram/Gauss solve *and* the residual updates stay in
+    the same VMEM tile (tuned separately from the joint-LMMSE kernel —
+    the per-tile arithmetic is ~n_tx times heavier)."""
+    return _demap_pallas(
+        _sic_core, "rx_sic_demap", y, h, noise_var, modem,
+        block_sc=block_sc, interpret=interpret,
+    )
+
+
 def mmse_detect_demap(
     y: jax.Array,
     h: jax.Array,
@@ -333,6 +445,34 @@ def mmse_detect_demap(
         )
     else:
         out = mmse_detect_demap_jnp(y, h, noise_var, modem)
+    if precision is None or not quant.is_quantized(precision):
+        return out
+    x_hat, nv_eff, llr = out
+    return x_hat, nv_eff, quant.fake_quant_llr(llr, precision)
+
+
+def sic_detect_demap(
+    y: jax.Array,
+    h: jax.Array,
+    noise_var: jax.Array,
+    modem,
+    *,
+    block_sc: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    precision: Optional[str] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused SIC equalize→demap; backend-dispatched like
+    :func:`mmse_detect_demap` (Pallas on TPU, one XLA-fused jnp function
+    elsewhere), parity-gated against :func:`repro.kernels.ref.
+    sic_detect_demap_ref`.  ``precision`` behaves as in
+    :func:`mmse_detect_demap`."""
+    if _use_pallas(use_pallas):
+        out = sic_detect_demap_pallas(
+            y, h, noise_var, modem, block_sc=block_sc, interpret=interpret
+        )
+    else:
+        out = sic_detect_demap_jnp(y, h, noise_var, modem)
     if precision is None or not quant.is_quantized(precision):
         return out
     x_hat, nv_eff, llr = out

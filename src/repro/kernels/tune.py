@@ -329,6 +329,36 @@ def autotune_rx_detect(batch: int, n_sym: int, n_sc: int, n_rx: int,
     )
 
 
+def autotune_rx_sic(batch: int, n_sym: int, n_sc: int, n_rx: int,
+                    n_tx: int, modem, *, iters: int = 3,
+                    cache: Optional[TuneCache] = None) -> tuple:
+    """Tune the subcarrier tile (bs,) of the fused SIC detect+demap kernel.
+
+    Tuned separately from ``rx_detect_demap``: the SIC core runs ~n_tx
+    shrinking Gram/Gauss solves per tile, so its best tile is usually
+    smaller than the joint-LMMSE kernel's.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import rx_fused as _rx
+
+    kk = jax.random.split(jax.random.PRNGKey(0), 4)
+    cplx = lambda k, shp: (jax.random.normal(k[0], shp)
+                           + 1j * jax.random.normal(k[1], shp))
+    y = cplx(kk[:2], (batch, n_sym, n_sc, n_rx))
+    h = cplx(kk[2:], (batch, n_sc, n_rx, n_tx))
+    nv = jnp.asarray(0.1, jnp.float32)
+    cands = [(bs,) for bs in _divisor_cands(n_sc, (512, 256, 128, 64))]
+    return autotune(
+        "rx_sic_demap", (n_sym, n_sc, n_rx, n_tx, len(modem.levels)),
+        cands,
+        lambda c: _rx.sic_detect_demap_pallas(
+            y, h, nv, modem, block_sc=c[0]
+        )[2],
+        iters=iters, cache=cache,
+    )
+
+
 def autotune_ldpc(batch: int, code, *, max_iters: int = 12,
                   iters: int = 3, cache: Optional[TuneCache] = None) -> tuple:
     """Tune the batch tile (bt,) of the layered LDPC decoder kernel."""

@@ -149,6 +149,44 @@ def mimo_mmse_detect_ext(
     return x_mmse / mu, (1.0 - mu) / mu
 
 
+def mimo_sic_detect_ext(
+    y: jax.Array,  # (B, n_sc, n_rx)
+    h: jax.Array,  # (B, n_sc, n_rx, n_tx)
+    noise_var: jax.Array,
+    modem,  # repro.phy.ofdm.Modem
+) -> tuple[jax.Array, jax.Array]:
+    """Successive interference cancellation on top of the unbiased MMSE
+    detector: detect a stream, hard-decide it on the modem's grid,
+    subtract its reconstructed contribution, and re-solve the shrunken
+    system for the remaining streams.
+
+    Streams are cancelled in index order — the repo's MU-MIMO scenarios
+    register their near-far ``user_power_db`` profiles strongest-first,
+    so index order is received-power order and each cancellation stage
+    removes the dominant remaining interferer.  Stage ``k`` therefore
+    sees only streams ``k..n_tx-1``: its MMSE solve is smaller *and*
+    cleaner than the joint LMMSE's, which is where the SIC sum-goodput
+    gain comes from.
+
+    Returns (x_hat (B, n_sc, n_tx), nv_eff (B, n_sc, n_tx)) — per
+    *original* stream, same contract as :func:`mimo_mmse_detect_ext`.
+    """
+    n_tx = h.shape[-1]
+    y_res = y
+    xs, nvs = [], []
+    for k in range(n_tx):
+        x_all, nv_all = mimo_mmse_detect_ext(y_res, h[..., k:], noise_var)
+        x_k, nv_k = x_all[..., 0], nv_all[..., 0]
+        xs.append(x_k)
+        nvs.append(nv_k)
+        if k < n_tx - 1:
+            # hard re-modulation: per-axis max-log hard bits back through
+            # the modem = the nearest constellation point (gray square QAM)
+            hard = (modem.demod_llr(x_k, nv_k) > 0).astype(jnp.int32)
+            y_res = y_res - h[..., k] * modem.mod(hard)[..., None]
+    return jnp.stack(xs, axis=-1), jnp.stack(nvs, axis=-1)
+
+
 def ls_channel_estimate_link(
     y: jax.Array,  # (B, n_sym, n_sc, n_rx) received grid
     pilot_seq: jax.Array,  # (n_sc,) known pilot symbols

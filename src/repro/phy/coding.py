@@ -391,6 +391,8 @@ def make_coded_slot(key: jax.Array, scenario, batch: int,
     slot = ofdm.make_link_slot(
         kc, g, scenario.modem, batch, scenario.snr_db,
         doppler_rho=scenario.doppler_rho, bits=bits,
+        interferer_db=scenario.interferer_db,
+        user_power_db=scenario.user_power_db,
     )
     slot["info_bits"] = info
     if rv is not None:

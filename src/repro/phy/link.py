@@ -344,6 +344,51 @@ def detect_demap_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem,
     return RxStage("detect_demap_fused", "PE", apply, cycles)
 
 
+def sic_demap_stage(cfg: ofdm.GridConfig, modem: ofdm.Modem,
+                    precision: Optional[str] = None) -> RxStage:
+    """Fused SIC equalize→demap (the MU-MIMO near-far receiver stage).
+
+    One :mod:`repro.kernels.rx_fused` pass per (batch, subcarrier) tile:
+    ``n_tx`` cancellation stages, each a shrinking in-register Gram/Gauss
+    solve over the not-yet-cancelled stream suffix, followed by a hard
+    re-modulation and residual subtraction that never leave the tile.
+    Streams are cancelled in index order (the repo's MU-MIMO scenarios
+    register ``user_power_db`` strongest-first).  ``precision`` behaves
+    as in :func:`detect_demap_stage`.
+    """
+
+    def apply(state):
+        h_est = state.get("h_hat", state.get("h_ls"))
+        x_hat, nv_eff, llr = rx_fused.sic_detect_demap(
+            state["y"], h_est, state["noise_var"], modem,
+            precision=precision,
+        )
+        state["x_hat"], state["nv_eff"], state["llr"] = x_hat, nv_eff, llr
+        return state
+
+    def cycles():
+        t, r = cfg.n_tx, cfg.n_rx
+        lvl = 2 ** (modem.bits_per_symbol // 2)
+        # shrinking gram+solve+rhs per cancellation stage (sizes t..1),
+        # one stream demapped per stage, plus the hard-remod cancellation
+        solve = sum(8.0 * (m * m * r + m ** 3 + m * r)
+                    for m in range(1, t + 1))
+        per_re = solve + t * lvl * 8.0 + (t - 1) * 8.0 * r
+        flops = cfg.n_symbols * cfg.n_subcarriers * per_re
+        return pool.BlockCycles(
+            te_cycles=0.0,
+            pe_cycles=pool.pe_cycles(flops, ipc=0.8),
+            dma_cycles=pool.dma_cycles(
+                _grid_bytes(cfg, cfg.n_rx)  # y in
+                + cfg.n_subcarriers * cfg.n_rx * cfg.n_tx * _C16  # H in
+                + _grid_bytes(cfg, cfg.n_tx * modem.bits_per_symbol // 2)
+                # ^ LLRs out; residuals / x_hat / nv_eff stay in L1
+            ),
+        )
+
+    return RxStage("sic_demap_fused", "PE", apply, cycles)
+
+
 def detect_stage(cfg: ofdm.GridConfig, fused: bool = False,
                  modem: Optional[ofdm.Modem] = None,
                  precision: Optional[str] = None) -> RxStage:
@@ -593,7 +638,8 @@ def _precision_tag(precision: str) -> str:
 
 
 def build_classical(scenario: LinkScenario, *, mmse_smooth: bool = True,
-                    fused: bool = False, precision: Optional[str] = None,
+                    fused: bool = False, sic: bool = False,
+                    precision: Optional[str] = None,
                     **_) -> ReceiverPipeline:
     """CFFT -> LS CHE [-> Wiener CHE] -> MIMO-MMSE detect -> LLR demod
     [-> CRC+LDPC decode].
@@ -607,20 +653,28 @@ def build_classical(scenario: LinkScenario, *, mmse_smooth: bool = True,
     ``precision="int8"|"fp8"`` serves the LLR plane on the quantized grid
     and runs the int8 layered min-sum decoder; the pipeline's energy
     report prices the datapath at that precision.
+
+    ``sic=True`` replaces the joint-LMMSE detect+demap with the fused
+    successive-interference-cancellation stage
+    (:func:`sic_demap_stage`) — the MU-MIMO near-far receiver.  SIC is
+    always served fused (the cancellation residuals live in-tile);
+    ``fused`` then only controls the LS-CHE path.
     """
     p = quant.resolve_precision(precision)
     cfg, modem = scenario.grid, scenario.modem
     stages = [cfft_stage(cfg), ls_che_stage(cfg, fused=fused)]
     if mmse_smooth:
         stages.append(mmse_che_stage(cfg))
-    if fused:
+    if sic:
+        stages.append(sic_demap_stage(cfg, modem, precision=p))
+    elif fused:
         stages.append(detect_stage(cfg, fused=True, modem=modem,
                                    precision=p))
     else:
         stages += [detect_stage(cfg), demod_stage(cfg, modem, precision=p)]
     if scenario.code is not None:
         stages.append(decode_stage(scenario, precision=p))
-    tag = "+fused" if fused else ""
+    tag = ("+sic" if sic else "") + ("+fused" if fused else "")
     return ReceiverPipeline(
         f"classical{tag}{_precision_tag(p)}/{scenario.name}",
         stages, scenario, precision=p,

@@ -95,12 +95,20 @@ _MODEMS = {
     "qam64": Modem(
         "qam64", 6, (-7.0, -5.0, -1.0, -3.0, 7.0, 5.0, 1.0, 3.0), 42.0
     ),
+    # levels[gray(k)] = 2k - 15: binary-reflected gray over 16 amplitudes,
+    # same construction as qam16/qam64; norm = 2 * mean(levels^2) = 170
+    "qam256": Modem(
+        "qam256", 8,
+        (-15.0, -13.0, -9.0, -11.0, -1.0, -3.0, -7.0, -5.0,
+         15.0, 13.0, 9.0, 11.0, 1.0, 3.0, 7.0, 5.0), 170.0
+    ),
 }
-_ORDER_TO_NAME = {4: "qpsk", 16: "qam16", 64: "qam64"}
+_ORDER_TO_NAME = {4: "qpsk", 16: "qam16", 64: "qam64", 256: "qam256"}
 
 
 def make_modem(modulation) -> Modem:
-    """Look up a modem by name ("qpsk"/"qam16"/"qam64") or order (4/16/64)."""
+    """Look up a modem by name ("qpsk"/"qam16"/"qam64"/"qam256") or order
+    (4/16/64/256)."""
     if isinstance(modulation, Modem):
         return modulation
     if isinstance(modulation, int):
@@ -243,6 +251,8 @@ def make_link_slot(
     snr_db: float,
     doppler_rho: float = 1.0,
     bits=None,
+    interferer_db: tuple = (),
+    user_power_db=None,
 ):
     """Simulate one uplink slot of the unified link schema (SISO..MIMO).
 
@@ -258,9 +268,27 @@ def make_link_slot(
     ``bits`` injects pre-drawn payload bits of that grid shape (the coded
     path in :mod:`repro.phy.coding` lays codewords onto the data REs);
     None draws i.i.d. uncoded bits.
+
+    ``user_power_db`` (len n_tx) applies a per-stream receive-power
+    offset — the MU-MIMO near-far profile when each tx layer is a
+    different user.  The gain is folded into the stored channel (pilots
+    ride it too), so channel estimation and detection see the *effective*
+    per-user channel and stay oracle-consistent.
+
+    ``interferer_db`` adds one co-channel interferer per entry at that
+    power (dB relative to a 0 dB user): each draws an independent TDL
+    channel (aging with the same ``doppler_rho``) and transmits random
+    QPSK on the whole grid — DMRS REs included, so interference corrupts
+    channel estimates exactly as a neighboring cell would.  The stored
+    ``noise_var`` is thermal + total mean interference power per rx
+    antenna (the interference-as-noise operating point the MMSE
+    regularizer and the demapper should be told about).
     """
     nb = modem.bits_per_symbol
-    kb, kc, kn = jax.random.split(key, 3)
+    if interferer_db:
+        kb, kc, kn, ki = jax.random.split(key, 4)
+    else:
+        kb, kc, kn = jax.random.split(key, 3)
     if bits is None:
         bits = jax.random.bernoulli(
             kb, 0.5, (batch, cfg.n_symbols, cfg.n_subcarriers, cfg.n_tx, nb)
@@ -283,6 +311,15 @@ def make_link_slot(
     else:
         h = tdl_channel(kc, cfg, batch)[:, None]  # (B, 1, n_rx, n_tx, n_sc)
     h = jnp.moveaxis(h, -1, 2)  # (B, T, n_sc, n_rx, n_tx)
+    if user_power_db is not None:
+        assert len(user_power_db) == cfg.n_tx, (
+            f"user_power_db needs one entry per tx stream "
+            f"({len(user_power_db)} != {cfg.n_tx})"
+        )
+        gains = jnp.asarray(
+            [10.0 ** (p / 20.0) for p in user_power_db], jnp.float32
+        )
+        h = h * gains  # effective per-user channel (pilots included)
 
     hb = jnp.broadcast_to(
         h, (batch, cfg.n_symbols) + h.shape[2:]
@@ -290,11 +327,37 @@ def make_link_slot(
     y = jnp.einsum("bmsrt,bmst->bmsr", hb, x)
     snr = 10.0 ** (snr_db / 10.0)
     noise_var = cfg.n_tx / snr
+    if interferer_db:
+        icfg = dataclasses.replace(cfg, n_tx=1)
+        for p_db, k_i in zip(interferer_db,
+                             jax.random.split(ki, len(interferer_db))):
+            kch, ksym = jax.random.split(k_i)
+            if doppler_rho < 1.0:
+                hi = tdl_channel_time_varying(
+                    kch, icfg, batch, cfg.n_symbols, doppler_rho
+                )
+            else:
+                hi = tdl_channel(kch, icfg, batch)[:, None]
+            hi = jnp.moveaxis(hi, -1, 2)  # (B, T, n_sc, n_rx, 1)
+            hib = jnp.broadcast_to(
+                hi, (batch, cfg.n_symbols) + hi.shape[2:]
+            ) if hi.shape[1] == 1 else hi
+            # unit-power QPSK on every RE of the co-channel grid
+            qi = jax.random.randint(
+                ksym, (batch, cfg.n_symbols, cfg.n_subcarriers), 0, 4
+            )
+            si = jnp.exp(1j * (jnp.pi / 4 + jnp.pi / 2 * qi))
+            amp = 10.0 ** (p_db / 20.0)
+            y = y + amp * hib[..., 0] * si[..., None]
+        noise_var = noise_var + sum(
+            10.0 ** (p / 10.0) for p in interferer_db
+        )
     kn1, kn2 = jax.random.split(kn)
     noise = jax.random.normal(kn1, y.shape) + 1j * jax.random.normal(
         kn2, y.shape
     )
-    y = y + noise * jnp.sqrt(noise_var / 2.0)
+    thermal_var = cfg.n_tx / snr
+    y = y + noise * jnp.sqrt(thermal_var / 2.0)
     y_time = jnp.fft.ifft(y, axis=2)
     return {
         "y_time": y_time, "y": y, "x": x, "h": h, "bits": bits,

@@ -38,13 +38,32 @@ from repro.phy.coding import CodeConfig, make_code
 class LinkScenario:
     name: str
     grid: ofdm.GridConfig
-    modulation: str  # "qpsk" | "qam16" | "qam64"
+    modulation: str  # "qpsk" | "qam16" | "qam64" | "qam256"
     snr_db: float
     doppler_rho: float = 1.0  # per-symbol tap correlation; 1.0 = static
     description: str = ""
     # channel code; None = uncoded (raw-LLR terminal, BER-scored).  Coded
     # scenarios append an LDPC decode stage and are BLER-scored.
     code: Optional[CodeConfig] = None
+    # co-channel interferers: one entry per interferer, receive power in
+    # dB relative to a 0 dB user.  Interference rides slot *generation*
+    # only (independent channels + symbols summed into y, DMRS REs
+    # included) — like SNR/Doppler it never splits a mesh shape group.
+    interferer_db: tuple = ()
+    # MU-MIMO near-far profile: per-tx-stream receive power offsets (dB),
+    # len == grid.n_tx.  Each tx layer is then a different user; the SIC
+    # receiver detects streams in index order, so register profiles
+    # strongest-first.  None = all streams at 0 dB (classic SU-MIMO).
+    user_power_db: Optional[tuple] = None
+
+    def __post_init__(self):
+        if self.user_power_db is not None and \
+                len(self.user_power_db) != self.grid.n_tx:
+            raise ValueError(
+                f"scenario {self.name!r}: user_power_db has "
+                f"{len(self.user_power_db)} entries for a "
+                f"{self.grid.n_tx}-stream grid"
+            )
 
     @property
     def modem(self) -> ofdm.Modem:
@@ -72,6 +91,12 @@ class LinkScenario:
     def coded(self) -> bool:
         return self.code is not None
 
+    @property
+    def n_users(self) -> int:
+        """Uplink users sharing the grid (1 unless an MU-MIMO near-far
+        profile makes each tx stream a distinct user)."""
+        return self.grid.n_tx if self.user_power_db is not None else 1
+
     def make_batch(self, key: jax.Array, batch: int) -> dict:
         """Simulate a batch of uplink slots of this scenario.
 
@@ -86,6 +111,8 @@ class LinkScenario:
         return ofdm.make_link_slot(
             key, self.grid, self.modem, batch, self.snr_db,
             doppler_rho=self.doppler_rho,
+            interferer_db=self.interferer_db,
+            user_power_db=self.user_power_db,
         )
 
     def build(self, receiver: str = "classical", **options):
@@ -117,23 +144,32 @@ class MCSLadder:
     rungs: tuple
 
     def __post_init__(self):
-        assert self.rungs, f"ladder {self.name!r} has no rungs"
+        if not self.rungs:
+            raise ValueError(f"ladder {self.name!r} has no rungs")
         scns = self.scenarios()
-        grids = {s.grid for s in scns}
-        assert len(grids) == 1, (
-            f"ladder {self.name!r} mixes grids: "
-            f"{[s.name for s in scns]}"
-        )
+        for prev, cur in zip(scns, scns[1:]):
+            if cur.grid != prev.grid:
+                raise ValueError(
+                    f"ladder {self.name!r} mixes grids: rung "
+                    f"{prev.name!r} and rung {cur.name!r} differ — all "
+                    "rungs must share one grid so MCS switches never "
+                    "change the receive-side input shapes"
+                )
         uncoded = [s.name for s in scns if s.code is None]
-        assert not uncoded, (
-            f"ladder {self.name!r} has uncoded rungs {uncoded} — "
-            "link adaptation needs CRC ACK/NACK feedback"
-        )
+        if uncoded:
+            raise ValueError(
+                f"ladder {self.name!r} has uncoded rungs {uncoded} — "
+                "link adaptation needs CRC ACK/NACK feedback"
+            )
         eff = [self.efficiency(i) for i in range(len(scns))]
-        assert eff == sorted(eff), (
-            f"ladder {self.name!r} rungs not in rising spectral-"
-            f"efficiency order: {dict(zip(self.rungs, eff))}"
-        )
+        for i in range(len(eff) - 1):
+            if eff[i + 1] < eff[i]:
+                raise ValueError(
+                    f"ladder {self.name!r} rungs not in rising spectral-"
+                    f"efficiency order: rung {self.rungs[i]!r} "
+                    f"({eff[i]} info bits/slot) is followed by rung "
+                    f"{self.rungs[i + 1]!r} ({eff[i + 1]} info bits/slot)"
+                )
 
     def scenarios(self) -> list[LinkScenario]:
         return [get_scenario(n) for n in self.rungs]
@@ -196,6 +232,7 @@ def all_scenarios() -> list[LinkScenario]:
 
 _SISO = ofdm.GridConfig(n_subcarriers=256, fft_size=256)
 _MIMO2X2 = ofdm.GridConfig(n_subcarriers=256, fft_size=256, n_tx=2, n_rx=2)
+_MIMO4X4 = ofdm.GridConfig(n_subcarriers=256, fft_size=256, n_tx=4, n_rx=4)
 _MIMO4X8 = ofdm.GridConfig(n_subcarriers=256, fft_size=256, n_tx=4, n_rx=8)
 
 for _s in [
@@ -254,6 +291,31 @@ for _s in [
         code=make_code("r34"),
         description="2x2 coded spatial multiplexing, 16-QAM rate-3/4",
     ),
+    # -- multi-user / interference / 256-QAM / channel aging ---------------
+    LinkScenario(
+        "siso-qam256-r34-snr28", _SISO, "qam256", 28.0,
+        code=make_code("r34"),
+        description="cell-center coded SISO peak rate, 256-QAM rate-3/4",
+    ),
+    LinkScenario(
+        "mimo4x4-qam16-mu-snr18", _MIMO4X4, "qam16", 18.0,
+        code=make_code("r12"),
+        user_power_db=(6.0, 3.0, 0.0, -3.0),
+        description="4-user MU-MIMO uplink with a near-far power profile "
+                    "(streams ordered strongest-first for SIC)",
+    ),
+    LinkScenario(
+        "mimo2x2-qam16-r12-intf-snr20", _MIMO2X2, "qam16", 20.0,
+        code=make_code("r12"), interferer_db=(-6.0,),
+        description="interference-limited 2x2 coded link with one "
+                    "co-channel neighbor at -6 dB",
+    ),
+    LinkScenario(
+        "siso-qam16-r12-aging-snr18", _SISO, "qam16", 18.0,
+        code=make_code("r12"), doppler_rho=0.92,
+        description="high-Doppler coded SISO: channel ages between the "
+                    "DMRS symbols (AR(1) taps, rho=0.92)",
+    ),
 ]:
     register_scenario(_s)
 
@@ -269,6 +331,14 @@ for _l in [
     MCSLadder("mimo2x2-coded", (
         "mimo2x2-qam16-r12-snr17",
         "mimo2x2-qam16-r34-snr20",
+    )),
+    # the wide SISO ladder tops out at a 256-QAM rung so OLLA can walk
+    # cell-center users all the way to peak spectral efficiency
+    MCSLadder("siso-coded-wide", (
+        "siso-qpsk-r12-snr8",
+        "siso-qam16-r12-snr15",
+        "siso-qam16-r34-snr18",
+        "siso-qam256-r34-snr28",
     )),
 ]:
     register_ladder(_l)

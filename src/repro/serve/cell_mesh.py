@@ -507,6 +507,16 @@ class ClosedCellSpec:
     sharing (ladder, receiver, options) form one ladder group: they share
     the per-rung pipelines and compiled mesh steps, and handover/load
     shedding moves users between them.
+
+    ``tx_power_db`` / ``coupling_db`` model co-channel coupling between
+    same-group neighbors: when ``coupling_db`` is set, every *other* cell
+    in this cell's ladder group contributes an interferer at
+    ``neighbor.tx_power_db + coupling_db`` dB relative to the served
+    signal (appended to each rung's own interferer list at slot
+    generation).  Interference never enters the shape-group key — coupled
+    and uncoupled cells compile the same mesh steps — and the default
+    ``coupling_db=None`` leaves trajectories byte-identical to an
+    uncoupled mesh.
     """
     name: str
     ladder: str
@@ -517,17 +527,22 @@ class ClosedCellSpec:
     init_mcs: int = 0
     receiver: str = "classical"
     options: tuple = ()
+    tx_power_db: float = 0.0
+    coupling_db: Optional[float] = None
 
 
 def closed_cell(name: str, ladder: str, receiver: str = "classical",
                 *, n_users: int = 4, arrival_rate: float = 1.0,
                 snr_db: Optional[float] = None, snr_spread_db: float = 0.0,
-                init_mcs: int = 0, **options) -> ClosedCellSpec:
+                init_mcs: int = 0, tx_power_db: float = 0.0,
+                coupling_db: Optional[float] = None,
+                **options) -> ClosedCellSpec:
     """Convenience constructor mirroring :func:`cell` for closed loops."""
     return ClosedCellSpec(
         name, ladder, n_users=n_users, arrival_rate=arrival_rate,
         snr_db=snr_db, snr_spread_db=snr_spread_db, init_mcs=init_mcs,
         receiver=receiver, options=tuple(sorted(options.items())),
+        tx_power_db=tx_power_db, coupling_db=coupling_db,
     )
 
 
@@ -755,17 +770,22 @@ class MeshSlotScheduler:
                 arrival_rate: float = 1.0, snr_db: Optional[float] = None,
                 snr_spread_db: float = 0.0, init_mcs: int = 0,
                 receiver: str = "classical", hot_cells: int = 0,
-                hot_factor: float = 1.0, options: Optional[dict] = None,
+                hot_factor: float = 1.0, tx_power_db: float = 0.0,
+                coupling_db: Optional[float] = None,
+                options: Optional[dict] = None,
                 **kw) -> "MeshSlotScheduler":
         """N same-config cells; the first ``hot_cells`` get their arrival
-        rate multiplied by ``hot_factor`` (load-skew sweeps)."""
+        rate multiplied by ``hot_factor`` (load-skew sweeps).  Setting
+        ``coupling_db`` couples every cell to its N-1 siblings (see
+        :class:`ClosedCellSpec`)."""
         specs = [
             closed_cell(
                 f"cell{i}", ladder, receiver, n_users=n_users,
                 arrival_rate=(arrival_rate * hot_factor if i < hot_cells
                               else arrival_rate),
                 snr_db=snr_db, snr_spread_db=snr_spread_db,
-                init_mcs=init_mcs, **(options or {}),
+                init_mcs=init_mcs, tx_power_db=tx_power_db,
+                coupling_db=coupling_db, **(options or {}),
             )
             for i in range(n_cells)
         ]
@@ -789,7 +809,25 @@ class MeshSlotScheduler:
             adapt=self.adapt, target_bler=self.target_bler,
             olla_step=self.olla_step, init_mcs=spec.init_mcs,
             snr_db=spec.snr_db, snr_spread_db=spec.snr_spread_db,
+            interferer_db=self._coupled_interferers(i),
             uid_base=self._uid_bases[i], job_ids=self.job_counter,
+        )
+
+    def _coupled_interferers(self, i: int) -> tuple:
+        """Cell ``i``'s co-channel interferer powers from its same-group
+        neighbors: ``sibling.tx_power_db + coupling_db`` for every other
+        cell in the ladder group (dB relative to the served signal).
+        ``coupling_db=None`` (the default) decouples the cell entirely —
+        a 1-cell mesh or an uncoupled N-cell mesh replays byte-identical
+        to the matching single-cell :class:`SlotScheduler` run.
+        """
+        spec = self.specs[i]
+        if spec.coupling_db is None:
+            return ()
+        return tuple(
+            self.specs[j].tx_power_db + spec.coupling_db
+            for j in self._group_of[i].cell_idxs
+            if j != i
         )
 
     # -- invariants (the test harness's observation surface) --------------

@@ -611,11 +611,17 @@ class CellLoop:
                  adapt: bool = True, target_bler: float = 0.1,
                  olla_step: float = 0.1, init_mcs: int = 0,
                  snr_db: Optional[float] = None,
-                 snr_spread_db: float = 0.0, uid_base: int = 0,
+                 snr_spread_db: float = 0.0,
+                 interferer_db: tuple = (), uid_base: int = 0,
                  job_ids=None):
         self.name = name
         self.rungs = list(rungs)
         self.rng = rng
+        # co-channel interferer powers (dB rel. signal) appended to every
+        # served rung's own interferer list — the mesh's coupling wiring
+        # sets this from same-group neighbor tx powers.  Empty () leaves
+        # slot generation byte-identical to an uncoupled cell.
+        self.interferer_db = tuple(interferer_db)
         self.batch_size = batch_size
         self.arrival_rate = arrival_rate
         self.max_retx = max_retx
@@ -700,7 +706,7 @@ class CellLoop:
             scn = self.rungs[mcs]
             n_cw = coding.codewords_per_slot(scn)
             slot = coding.make_coded_slot(
-                self.next_key(), scn.replace(snr_db=user.snr_db), 1, rv=0
+                self.next_key(), self._tx_scenario(scn, user), 1, rv=0
             )
             job.harq = HarqProcess(
                 mcs=mcs,
@@ -714,11 +720,21 @@ class CellLoop:
             h = job.harq
             scn = self.rungs[h.mcs]  # retx pins the MCS of the first tx
             slot = coding.make_coded_slot(
-                self.next_key(), scn.replace(snr_db=user.snr_db), 1,
+                self.next_key(), self._tx_scenario(scn, user), 1,
                 rv=h.rv, info=h.info,
             )
         slot["prior_llr"] = job.harq.prior
         return slot
+
+    def _tx_scenario(self, scn, user: UserState):
+        """The per-transmission scenario: the rung at the user's SNR, plus
+        any cell-level co-channel interference on top of the rung's own."""
+        if self.interferer_db:
+            return scn.replace(
+                snr_db=user.snr_db,
+                interferer_db=tuple(scn.interferer_db) + self.interferer_db,
+            )
+        return scn.replace(snr_db=user.snr_db)
 
     # -- feedback ---------------------------------------------------------
     def serve_feedback(self, user: UserState, job: _Job, mcs: int,
@@ -959,6 +975,9 @@ class SlotScheduler:
         the target), and crossing +-1 walks the user one rung up/down.
     snr_db: the users' channel SNR (defaults to the lowest rung's
         operating point); snr_spread_db spreads users uniformly around it.
+    interferer_db: cell-level co-channel interferer powers (dB relative
+        to the signal), appended to every rung's own interferer list for
+        each served slot.
     seed: the single seed behind every random draw (arrivals, SNR
         spread, slot/channel/noise realizations) via :func:`cell_rng` —
         two schedulers with equal config + seed replay identically.
@@ -973,7 +992,8 @@ class SlotScheduler:
                  adapt: bool = True, target_bler: float = 0.1,
                  olla_step: float = 0.1, init_mcs: int = 0,
                  snr_db: Optional[float] = None,
-                 snr_spread_db: float = 0.0, seed: int = 0):
+                 snr_spread_db: float = 0.0,
+                 interferer_db: tuple = (), seed: int = 0):
         self.ladder_name, self.rungs = resolve_ladder(ladder)
         self.receiver = receiver
         self.batch_size = batch_size
@@ -994,7 +1014,7 @@ class SlotScheduler:
             max_batches_per_tick=max_batches_per_tick, adapt=adapt,
             target_bler=target_bler, olla_step=olla_step,
             init_mcs=init_mcs, snr_db=snr_db,
-            snr_spread_db=snr_spread_db,
+            snr_spread_db=snr_spread_db, interferer_db=interferer_db,
         )
         self.ledger = SlotLedger()
 

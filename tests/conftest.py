@@ -1,0 +1,46 @@
+"""Shared test-session configuration.
+
+Two jobs, both about keeping tier-1 deterministic and bounded:
+
+* **hypothesis profiles** — registered and loaded once here so every
+  property-based test in the suite runs the same derandomized,
+  small-example CI profile (no example database, no flaky deadlines,
+  reproducible in every run).  Wide ``slow``-marked fuzz variants opt
+  into the ``repro-wide`` profile explicitly.
+* **markers** — ``slow`` (long fuzz sweeps, deselect with
+  ``-m 'not slow'``) and ``tpu`` (needs a real TPU backend) are
+  registered in ``pyproject.toml``; ``tpu``-marked tests are skipped
+  automatically off-TPU so tier-1 never depends on the accelerator.
+"""
+import jax
+import pytest
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "repro-ci",
+        derandomize=True,
+        max_examples=5,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.register_profile(
+        "repro-wide",
+        derandomize=True,
+        max_examples=20,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.load_profile("repro-ci")
+except ImportError:  # deterministic cores still run without hypothesis
+    pass
+
+
+def pytest_collection_modifyitems(config, items):
+    if jax.default_backend() == "tpu":
+        return
+    skip_tpu = pytest.mark.skip(reason="needs a TPU backend")
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip_tpu)

@@ -1,29 +1,36 @@
 """Property-based scenario/traffic fuzzing of the PHY pipeline invariants.
 
-Three invariants must hold for *every* valid (grid, modem, code, SNR,
-arrival-rate, max-retx) combination, not just the registered operating
-points:
+One composable strategy (:func:`link_configs`) samples the full widened
+scenario space — users x co-channel interferers x modem (up to 256-QAM)
+x code x Doppler aging x SNR — and every invariant below must hold for
+*every* sampled point, not just the registered operating points:
 
-* **LLR sign agreement** — the fused detect+demap path agrees with the
-  unfused linalg-solve oracle on >= 99% of LLR signs.
+* **LLR sign agreement** — the fused detect+demap paths (joint LMMSE
+  *and* staged SIC) agree with their unfused linalg-solve oracles on
+  >= 99% of LLR signs.
 * **BLER monotone in SNR** — more SNR never makes the coded link worse
   (beyond sampling slack).
+* **BLER monotone in interference** — weaker co-channel interference
+  never makes the coded link worse (beyond sampling slack).
+* **SIC >= LMMSE sum-goodput** — on a near-far MU-MIMO slot, the staged
+  SIC receiver decodes at least as many transport blocks as the joint
+  LMMSE receiver (beyond sampling slack).
 * **closed-loop residual <= first-tx BLER** — after a full drain, HARQ
   with IR combining can only recover blocks, never lose extra ones
   (exact: every lost block failed its first transmission too).
 * **conservation under random mesh configs** — no transport-block job is
-  lost or duplicated by the mesh closed loop, whatever the topology.
+  lost or duplicated by the mesh closed loop, whatever the topology and
+  whether or not neighbor cells are interference-coupled.
 * **conservation under random fault schedules** — the supervised mesh
-  (:class:`~repro.serve.supervisor.Supervisor`) keeps the invariant
-  exact (finalized + queued + failed == submitted) and completes its
-  run under any :meth:`FaultPlan.seeded` schedule — NaN bursts, slot
-  corruption, step errors, stragglers, and cell crashes; after a full
-  drain the residual BLER still never exceeds first-tx BLER.
+  (:class:`~repro.serve.supervisor.Supervisor`) keeps the 3-leg
+  invariant exact (finalized + queued + failed == submitted) and
+  completes its run under any :meth:`FaultPlan.seeded` schedule; after
+  a full drain the residual BLER still never exceeds first-tx BLER.
 
 A small deterministic core (fixed combos sampled from the same space)
 always runs in tier-1 — even without hypothesis installed.  The
-hypothesis tests run a derandomized, small-example CI profile, with
-wider `slow`-marked variants beyond it.
+hypothesis tests inherit the derandomized ``repro-ci`` profile loaded
+in ``conftest.py``, with wider ``slow``-marked variants beyond it.
 """
 import dataclasses
 
@@ -39,7 +46,7 @@ from repro.phy.scenarios import get_scenario
 from repro.serve import FaultPlan, MeshSlotScheduler, SlotScheduler, Supervisor
 
 try:
-    from hypothesis import HealthCheck, given, settings
+    from hypothesis import given, settings
     from hypothesis import strategies as st
 
     HAVE_HYPOTHESIS = True
@@ -48,36 +55,50 @@ except ImportError:  # tier-1 core below still runs
 
 KEY = jax.random.PRNGKey(0)
 
-# the sampled space: every registered coded operating point x small grids
-# x an SNR offset around the operating point
+# the sampled space: every registered coded operating point (including
+# 256-QAM and the near-far MU-MIMO point) x small grids x an SNR offset
+# around the operating point x Doppler aging x co-channel interferers
 CODED_BASES = (
     "siso-qpsk-r12-snr8",
     "siso-qam16-r12-snr15",
     "siso-qam16-r34-snr18",
+    "siso-qam256-r34-snr28",
     "mimo2x2-qam16-r12-snr17",
     "mimo2x2-qam16-r34-snr20",
+    "mimo4x4-qam16-mu-snr18",
 )
+MU_BASES = ("mimo4x4-qam16-mu-snr18",)
 GRID_SIZES = (32, 64)
+DOPPLER_RHOS = (1.0, 0.97, 0.92)
 
 
-def _scenario(base: str, n_sc: int, snr_off: float):
+def _scenario(base: str, n_sc: int, snr_off: float,
+              doppler_rho=None, interferer_db=None):
     """A small-grid clone of ``base`` shifted ``snr_off`` dB off its
-    operating point (unregistered: pipelines take scenario objects)."""
+    operating point, optionally with channel aging and co-channel
+    interferers (unregistered: pipelines take scenario objects)."""
     scn = get_scenario(base)
     grid = dataclasses.replace(
         scn.grid, n_subcarriers=n_sc, fft_size=n_sc, n_taps=4,
         delay_spread=1.0,
     )
+    kw = {}
+    if doppler_rho is not None:
+        kw["doppler_rho"] = doppler_rho
+    if interferer_db is not None:
+        kw["interferer_db"] = tuple(interferer_db)
     return scn.replace(
         name=f"fuzz-{base}-sc{n_sc}", grid=grid,
-        snr_db=scn.snr_db + snr_off,
+        snr_db=scn.snr_db + snr_off, **kw,
     )
 
 
 # -- the invariants ---------------------------------------------------------
 
 def _check_llr_sign_agreement(scn, key) -> float:
-    """Fused detect+demap vs the unfused oracle: >= 99% LLR signs."""
+    """Fused detect+demap vs the unfused oracle: >= 99% LLR signs —
+    for the joint-LMMSE path always, and for the staged SIC path on
+    multi-stream grids."""
     slot = scn.make_batch(key, 2)
     h = jnp.mean(slot["h"], axis=1)
     _, _, llr_f = rx_fused.mmse_detect_demap(
@@ -88,6 +109,15 @@ def _check_llr_sign_agreement(scn, key) -> float:
     )
     agree = float(jnp.mean((llr_f > 0) == (llr_r > 0)))
     assert agree >= 0.99, (scn.name, agree)
+    if scn.grid.n_tx > 1:
+        _, _, llr_fs = rx_fused.sic_detect_demap(
+            slot["y"], h, slot["noise_var"], scn.modem, use_pallas=False
+        )
+        _, _, llr_rs = ref.sic_detect_demap_ref(
+            slot["y"], h, slot["noise_var"], scn.modem
+        )
+        agree_s = float(jnp.mean((llr_fs > 0) == (llr_rs > 0)))
+        assert agree_s >= 0.99, (scn.name, "sic", agree_s)
     return agree
 
 
@@ -103,6 +133,36 @@ def _check_bler_monotone(scn, key, step_db: float = 6.0,
     lo = _bler(scn, key)
     hi = _bler(scn.replace(snr_db=scn.snr_db + step_db), key)
     assert hi <= lo + slack, (scn.name, lo, hi)
+
+
+def _check_bler_monotone_interference(scn, key, step_db: float = 6.0,
+                                      slack: float = 0.15) -> None:
+    """Weaker co-channel interference never hurts the coded link
+    (modulo sampling slack).  ``scn`` must carry interferers."""
+    assert scn.interferer_db
+    weak = scn.replace(
+        interferer_db=tuple(p - step_db for p in scn.interferer_db)
+    )
+    strong_bler = _bler(scn, key)
+    weak_bler = _bler(weak, key)
+    assert weak_bler <= strong_bler + slack, (
+        scn.name, scn.interferer_db, strong_bler, weak_bler
+    )
+
+
+def _check_sic_ge_lmmse(scn, key, batch: int = 4,
+                        slack: float = 0.15) -> None:
+    """On a near-far MU slot the staged SIC receiver delivers at least
+    the joint LMMSE receiver's sum goodput (modulo sampling slack):
+    cancelling the strong users removes their interference from the
+    weak ones, while LMMSE must null them linearly."""
+    slot = scn.make_batch(key, batch)
+    oks = {}
+    for name, kw in (("lmmse", {"fused": True}), ("sic", {"sic": True})):
+        pipe = build_pipeline("classical", scn, **kw)
+        state = pipe.run(dict(slot))
+        oks[name] = float(jnp.mean(state["crc_ok"].astype(jnp.float32)))
+    assert oks["sic"] >= oks["lmmse"] - slack, (scn.name, oks)
 
 
 def _check_residual_le_first_tx(scn, max_retx: int, seed: int) -> None:
@@ -130,12 +190,13 @@ def _check_residual_le_first_tx(scn, max_retx: int, seed: int) -> None:
 
 
 def _check_mesh_conservation(n_cells: int, arrival_rate: float,
-                             cap, max_retx: int, seed: int) -> None:
+                             cap, max_retx: int, seed: int,
+                             coupling_db=None) -> None:
     sch = MeshSlotScheduler.uniform(
         "fz-ladder", n_cells, n_users=2, arrival_rate=arrival_rate,
         hot_cells=1, hot_factor=4.0, batch_size=2,
         max_batches_per_tick=cap, deadline_ttis=1, max_retx=max_retx,
-        seed=seed,
+        coupling_db=coupling_db, seed=seed,
     )
     sch.run(3)
     ids = sorted(sch.finalized_job_ids() + sch.queued_job_ids())
@@ -208,32 +269,54 @@ def _fz_ladder():
 # -- tier-1 deterministic core (runs with or without hypothesis) ------------
 
 CORE_CASES = [
-    # (base scenario, n_subcarriers, snr offset, max_retx, seed)
-    ("siso-qpsk-r12-snr8", 64, 0.0, 1, 0),
-    ("siso-qam16-r12-snr15", 32, 2.0, 2, 1),
-    ("mimo2x2-qam16-r12-snr17", 64, -1.0, 2, 2),
+    # (base, n_subcarriers, snr offset, doppler rho, interferers, retx, seed)
+    ("siso-qpsk-r12-snr8", 64, 0.0, 1.0, (), 1, 0),
+    ("siso-qam16-r12-snr15", 32, 2.0, 1.0, (), 2, 1),
+    ("mimo2x2-qam16-r12-snr17", 64, -1.0, 1.0, (), 2, 2),
+    ("siso-qam256-r34-snr28", 64, 0.0, 1.0, (), 1, 3),
+    ("siso-qam16-r12-snr15", 64, 0.0, 0.92, (-9.0,), 1, 4),
+    ("mimo4x4-qam16-mu-snr18", 32, 0.0, 1.0, (), 1, 5),
 ]
 
 
-@pytest.mark.parametrize("base,n_sc,snr_off,max_retx,seed", CORE_CASES)
-def test_core_pipeline_invariants(base, n_sc, snr_off, max_retx, seed):
-    scn = _scenario(base, n_sc, snr_off)
+@pytest.mark.parametrize("base,n_sc,snr_off,rho,intf,max_retx,seed",
+                         CORE_CASES)
+def test_core_pipeline_invariants(base, n_sc, snr_off, rho, intf,
+                                  max_retx, seed):
+    scn = _scenario(base, n_sc, snr_off, doppler_rho=rho,
+                    interferer_db=intf)
     key = jax.random.PRNGKey(seed)
     _check_llr_sign_agreement(scn, key)
     _check_bler_monotone(scn, key)
+    if intf:
+        _check_bler_monotone_interference(scn, key)
 
 
-@pytest.mark.parametrize("base,n_sc,snr_off,max_retx,seed",
+@pytest.mark.parametrize("base,n_sc,snr_off,rho,intf,max_retx,seed",
                          CORE_CASES[:2])
-def test_core_closed_loop_invariants(base, n_sc, snr_off, max_retx, seed):
+def test_core_closed_loop_invariants(base, n_sc, snr_off, rho, intf,
+                                     max_retx, seed):
     scn = _scenario(base, n_sc, snr_off)
     _check_residual_le_first_tx(scn, max_retx, seed)
+
+
+def test_core_sic_ge_lmmse():
+    scn = _scenario("mimo4x4-qam16-mu-snr18", 64, 2.0)
+    _check_sic_ge_lmmse(scn, jax.random.PRNGKey(0))
 
 
 def test_core_mesh_conservation():
     _fz_ladder()
     _check_mesh_conservation(
         n_cells=3, arrival_rate=0.8, cap=1, max_retx=1, seed=3
+    )
+
+
+def test_core_coupled_mesh_conservation():
+    _fz_ladder()
+    _check_mesh_conservation(
+        n_cells=2, arrival_rate=0.8, cap=1, max_retx=1, seed=7,
+        coupling_db=-8.0,
     )
 
 
@@ -247,63 +330,84 @@ def test_core_supervised_fault_conservation():
 # -- hypothesis fuzz --------------------------------------------------------
 
 if HAVE_HYPOTHESIS:
-    # derandomized, small-example CI profile: reproducible in every run,
-    # no example database, no flaky deadlines
-    CI_PROFILE = settings(
-        derandomize=True, max_examples=5, deadline=None,
-        suppress_health_check=[HealthCheck.too_slow],
-    )
-    SLOW_PROFILE = settings(
-        derandomize=True, max_examples=20, deadline=None,
-        suppress_health_check=[HealthCheck.too_slow],
-    )
+    # profile: conftest.py loads the derandomized "repro-ci" profile for
+    # every @given test; slow-marked sweeps opt into "repro-wide"
+    WIDE = settings.get_profile("repro-wide")
 
-    combos = st.tuples(
-        st.sampled_from(CODED_BASES),
-        st.sampled_from(GRID_SIZES),
-        st.floats(min_value=-2.0, max_value=6.0,
-                  allow_nan=False, allow_infinity=False),
-        st.integers(min_value=0, max_value=3),  # max_retx
-        st.integers(min_value=0, max_value=2**16),  # seed
-    )
+    @st.composite
+    def link_configs(draw, bases=CODED_BASES, interferers=True):
+        """One point in the widened scenario space: base operating point
+        x grid x SNR offset x Doppler aging x co-channel interferers
+        x HARQ depth x seed."""
+        base = draw(st.sampled_from(bases))
+        n_sc = draw(st.sampled_from(GRID_SIZES))
+        snr_off = draw(st.floats(min_value=-2.0, max_value=6.0,
+                                 allow_nan=False, allow_infinity=False))
+        rho = draw(st.sampled_from(DOPPLER_RHOS))
+        intf = ()
+        if interferers:
+            intf = tuple(draw(st.lists(
+                st.floats(min_value=-18.0, max_value=-6.0,
+                          allow_nan=False, allow_infinity=False),
+                min_size=0, max_size=2,
+            )))
+        retx = draw(st.integers(min_value=0, max_value=3))
+        seed = draw(st.integers(min_value=0, max_value=2**16))
+        return base, n_sc, snr_off, rho, intf, retx, seed
 
-    @CI_PROFILE
-    @given(combo=combos)
+    @given(combo=link_configs())
     def test_fuzz_llr_sign_agreement(combo):
-        base, n_sc, snr_off, _retx, seed = combo
-        scn = _scenario(base, n_sc, snr_off)
+        base, n_sc, snr_off, rho, intf, _retx, seed = combo
+        scn = _scenario(base, n_sc, snr_off, doppler_rho=rho,
+                        interferer_db=intf)
         _check_llr_sign_agreement(scn, jax.random.PRNGKey(seed % 97))
 
-    @CI_PROFILE
-    @given(combo=combos)
+    @given(combo=link_configs())
     def test_fuzz_bler_monotone(combo):
-        base, n_sc, snr_off, _retx, seed = combo
-        scn = _scenario(base, n_sc, snr_off)
+        base, n_sc, snr_off, rho, intf, _retx, seed = combo
+        scn = _scenario(base, n_sc, snr_off, doppler_rho=rho,
+                        interferer_db=intf)
         _check_bler_monotone(scn, jax.random.PRNGKey(seed % 97))
 
-    @CI_PROFILE
-    @given(combo=combos)
+    @given(combo=link_configs())
+    def test_fuzz_bler_monotone_interference(combo):
+        base, n_sc, snr_off, rho, intf, _retx, seed = combo
+        if not intf:
+            intf = (-9.0,)
+        scn = _scenario(base, n_sc, snr_off, doppler_rho=rho,
+                        interferer_db=intf)
+        _check_bler_monotone_interference(
+            scn, jax.random.PRNGKey(seed % 97)
+        )
+
+    @given(combo=link_configs(bases=MU_BASES, interferers=False))
+    def test_fuzz_sic_ge_lmmse(combo):
+        base, n_sc, snr_off, rho, _intf, _retx, seed = combo
+        scn = _scenario(base, n_sc, max(snr_off, 0.0), doppler_rho=rho)
+        _check_sic_ge_lmmse(scn, jax.random.PRNGKey(seed % 97))
+
+    @given(combo=link_configs(interferers=False))
     def test_fuzz_closed_loop_residual(combo):
-        base, n_sc, snr_off, retx, seed = combo
+        base, n_sc, snr_off, _rho, _intf, retx, seed = combo
         scn = _scenario(base, n_sc, snr_off)
         _check_residual_le_first_tx(scn, retx, seed % 97)
 
-    @CI_PROFILE
     @given(
         n_cells=st.integers(min_value=1, max_value=4),
         arrival_rate=st.floats(min_value=0.2, max_value=1.5),
         cap=st.sampled_from([None, 1, 2]),
         max_retx=st.integers(min_value=0, max_value=2),
+        coupling_db=st.sampled_from([None, -12.0, -8.0]),
         seed=st.integers(min_value=0, max_value=2**16),
     )
     def test_fuzz_mesh_conservation(n_cells, arrival_rate, cap,
-                                    max_retx, seed):
+                                    max_retx, coupling_db, seed):
         _fz_ladder()
         _check_mesh_conservation(
-            n_cells, arrival_rate, cap, max_retx, seed % 97
+            n_cells, arrival_rate, cap, max_retx, seed % 97,
+            coupling_db=coupling_db,
         )
 
-    @CI_PROFILE
     @given(
         n_cells=st.integers(min_value=1, max_value=3),
         rates=st.sampled_from(FAULT_RATE_SETS),
@@ -318,17 +422,18 @@ if HAVE_HYPOTHESIS:
         )
 
     @pytest.mark.slow
-    @SLOW_PROFILE
-    @given(combo=combos)
+    @settings(WIDE)
+    @given(combo=link_configs(interferers=False))
     def test_fuzz_closed_loop_residual_wide(combo):
-        base, n_sc, snr_off, retx, seed = combo
+        base, n_sc, snr_off, _rho, _intf, retx, seed = combo
         scn = _scenario(base, n_sc, snr_off)
         _check_residual_le_first_tx(scn, retx, seed % 997)
 
     @pytest.mark.slow
-    @SLOW_PROFILE
-    @given(combo=combos)
+    @settings(WIDE)
+    @given(combo=link_configs())
     def test_fuzz_llr_sign_agreement_wide(combo):
-        base, n_sc, snr_off, _retx, seed = combo
-        scn = _scenario(base, n_sc, snr_off)
+        base, n_sc, snr_off, rho, intf, _retx, seed = combo
+        scn = _scenario(base, n_sc, snr_off, doppler_rho=rho,
+                        interferer_db=intf)
         _check_llr_sign_agreement(scn, jax.random.PRNGKey(seed % 997))

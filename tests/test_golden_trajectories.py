@@ -1,0 +1,141 @@
+"""Golden-trajectory regression tests for the closed-loop schedulers.
+
+A seeded :class:`~repro.serve.runtime.SlotScheduler` and a seeded
+:class:`~repro.serve.cell_mesh.MeshSlotScheduler` run a short fixed
+workload; the resulting reports — aggregate fields, the per-tick log,
+and the per-user final OLLA/MCS state — are compared field-for-field
+against snapshots committed under ``tests/golden/``.
+
+The snapshots pin the *trajectory*, not just the invariants: any change
+to arrival draws, slot RNG key order, OLLA accounting, HARQ bookkeeping,
+or batch planning shows up as a diff here even when every conservation
+invariant still holds.  Wall-clock-derived fields (``wall_s``,
+``slots_per_sec``, ``goodput_bits_per_sec``) are excluded; everything
+else must match exactly (ints/strings/bools) or to float tolerance.
+
+Regenerate after an *intentional* trajectory change with::
+
+    PYTHONPATH=src python tests/test_golden_trajectories.py --regen
+"""
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.serve import MeshSlotScheduler, SlotScheduler
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+# fields derived from host wall time: not reproducible, never snapshotted
+_UNSTABLE = {"wall_s", "slots_per_sec", "goodput_bits_per_sec",
+             "info_bits_per_sec", "cells"}
+
+
+def _stable(report) -> dict:
+    out = {}
+    for k, v in dataclasses.asdict(report).items():
+        if k not in _UNSTABLE:
+            out[k] = v
+    return out
+
+
+def _single_cell_snapshot() -> dict:
+    sch = SlotScheduler(
+        "siso-coded", n_users=3, batch_size=2, arrival_rate=0.8,
+        snr_spread_db=2.0, max_retx=2, seed=11,
+    )
+    rep = sch.run(6)
+    return {
+        "report": _stable(rep),
+        "ticks": [dataclasses.asdict(t) for t in sch.tick_log],
+        "users": [
+            {"user_id": u.user_id, "mcs": u.mcs, "olla": u.olla,
+             "snr_db": u.snr_db}
+            for u in sch.users
+        ],
+    }
+
+
+def _mesh_snapshot() -> dict:
+    sch = MeshSlotScheduler.uniform(
+        "siso-coded", 2, n_users=2, arrival_rate=0.8, batch_size=2,
+        max_retx=2, seed=11,
+    )
+    rep = sch.run(4)
+    return {
+        "report": _stable(rep),
+        "cells": {
+            name: _stable(cell_rep)
+            for name, cell_rep in sorted(rep.cells.items())
+        },
+        "ticks": {
+            loop.name: [dataclasses.asdict(t) for t in loop.tick_log]
+            for loop in sch.loops
+        },
+        "users": {
+            loop.name: [
+                {"user_id": u.user_id, "mcs": u.mcs, "olla": u.olla,
+                 "snr_db": u.snr_db}
+                for u in loop.users
+            ]
+            for loop in sch.loops
+        },
+    }
+
+
+SNAPSHOTS = {
+    "single_cell_siso_coded.json": _single_cell_snapshot,
+    "mesh_siso_coded_2cell.json": _mesh_snapshot,
+}
+
+
+def _assert_same(got, want, path: str) -> None:
+    """Field-for-field identity; floats to tolerance, all else exact."""
+    if isinstance(want, float) and want is not None:
+        assert isinstance(got, (int, float)), f"{path}: {got!r} != {want!r}"
+        assert np.isclose(got, want, rtol=1e-5, atol=1e-8), (
+            f"{path}: {got!r} != {want!r}"
+        )
+    elif isinstance(want, dict):
+        assert isinstance(got, dict), f"{path}: {got!r} != {want!r}"
+        assert sorted(got) == sorted(want), (
+            f"{path}: keys {sorted(got)} != {sorted(want)}"
+        )
+        for k in want:
+            _assert_same(got[k], want[k], f"{path}.{k}")
+    elif isinstance(want, list):
+        assert isinstance(got, list), f"{path}: {got!r} != {want!r}"
+        assert len(got) == len(want), (
+            f"{path}: length {len(got)} != {len(want)}"
+        )
+        for i, (g, w) in enumerate(zip(got, want)):
+            _assert_same(g, w, f"{path}[{i}]")
+    else:
+        assert got == want, f"{path}: {got!r} != {want!r}"
+
+
+@pytest.mark.parametrize("fname", sorted(SNAPSHOTS))
+def test_golden_trajectory(fname):
+    golden_path = GOLDEN_DIR / fname
+    assert golden_path.exists(), (
+        f"missing golden snapshot {golden_path}; regenerate with "
+        f"`PYTHONPATH=src python {__file__} --regen`"
+    )
+    want = json.loads(golden_path.read_text())
+    # round-trip through JSON so tuples/floats normalize identically
+    got = json.loads(json.dumps(SNAPSHOTS[fname]()))
+    _assert_same(got, want, fname)
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" not in sys.argv:
+        sys.exit(f"usage: python {__file__} --regen")
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    for fname, fn in SNAPSHOTS.items():
+        path = GOLDEN_DIR / fname
+        path.write_text(json.dumps(fn(), indent=1, sort_keys=True) + "\n")
+        print(f"wrote {path}")

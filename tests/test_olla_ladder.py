@@ -1,0 +1,131 @@
+"""OLLA ladder-boundary behavior and MCS-ladder validation errors.
+
+The outer loop's MCS walk must stay pinned at the ladder edges — a
+perfect channel never walks past the top rung, a NACK storm never walks
+below rung 0 — and in both cases the accumulator keeps resetting on
+every +-1 crossing instead of winding up, so the first *real* channel
+change still moves the user within one crossing's worth of feedback.
+
+:class:`~repro.phy.scenarios.MCSLadder` construction errors must name
+the offending rung (pair): a ladder typo should read like a diagnosis,
+not an assert.
+"""
+import numpy as np
+import pytest
+
+from repro.phy import scenarios
+from repro.phy.scenarios import MCSLadder
+from repro.serve import SlotScheduler
+from repro.serve.runtime import CellLoop, cell_rng
+
+
+def _loop(n_rungs: int = 3, olla_step: float = 0.25,
+          init_mcs: int = 0) -> CellLoop:
+    _, rungs = __import__(
+        "repro.serve.runtime", fromlist=["resolve_ladder"]
+    ).resolve_ladder("siso-coded")
+    return CellLoop(
+        rungs[:n_rungs], rng=cell_rng(0), n_users=1,
+        olla_step=olla_step, target_bler=0.5,  # symmetric +-0.25 steps
+        init_mcs=init_mcs,
+    )
+
+
+def test_olla_walks_up_and_resets():
+    loop = _loop()
+    user = loop.users[0]
+    assert user.mcs == 0
+    for _ in range(4):  # 4 * 0.25 crosses +1.0
+        loop._olla(user, ack=True)
+    assert user.mcs == 1
+    assert user.olla == 0.0  # accumulator resets on the crossing
+
+
+def test_olla_pinned_at_top_rung():
+    loop = _loop(init_mcs=2)
+    user = loop.users[0]
+    assert user.mcs == len(loop.rungs) - 1
+    for i in range(40):  # many crossings' worth of ACKs
+        loop._olla(user, ack=True)
+        assert user.mcs == len(loop.rungs) - 1, f"walked past top at {i}"
+        assert -1.0 < user.olla < 1.0  # resets every crossing, no windup
+    # the pinned accumulator still reacts to a real downturn promptly
+    for _ in range(4):
+        loop._olla(user, ack=False)
+    assert user.mcs == len(loop.rungs) - 2
+
+
+def test_olla_nack_storm_pinned_at_rung_zero():
+    loop = _loop(init_mcs=0)
+    user = loop.users[0]
+    for i in range(40):
+        loop._olla(user, ack=False)
+        assert user.mcs == 0, f"walked below rung 0 at NACK {i}"
+        assert -1.0 < user.olla < 1.0, "accumulator wound up"
+    # recovery: the storm leaves no debt beyond one crossing
+    for _ in range(4):
+        loop._olla(user, ack=True)
+    assert user.mcs == 1
+
+
+def test_nack_storm_closed_loop_stays_at_rung_zero():
+    """End-to-end: a channel far below the bottom rung's operating point
+    NACKs every first transmission; adaptation must hold every user at
+    rung 0 and the loop must still drain its HARQ state."""
+    sch = SlotScheduler(
+        "siso-coded", n_users=2, batch_size=2, arrival_rate=0.0,
+        max_retx=1, adapt=True, olla_step=0.5, snr_db=-10.0, seed=0,
+    )
+    sch.inject_backlog(2)
+    for _ in range(16):
+        if sch.loop.backlog == 0:
+            break
+        sch.tick()
+    rep = sch.report()
+    assert rep.backlog_left == 0
+    assert rep.harq_open == 0
+    assert all(u.mcs == 0 for u in sch.users)
+    assert rep.first_tx_bler == 1.0  # it really was a storm
+    assert rep.mcs_occupancy[sch.loop.rungs[0].name] == 1.0
+
+
+# -- MCSLadder validation messages ------------------------------------------
+
+def test_ladder_rejects_empty():
+    with pytest.raises(ValueError, match="'empty' has no rungs"):
+        MCSLadder("empty", ())
+
+
+def test_ladder_error_names_mixed_grid_rungs():
+    with pytest.raises(ValueError) as e:
+        MCSLadder("mixed", ("siso-qpsk-r12-snr8",
+                            "mimo2x2-qam16-r12-snr17"))
+    msg = str(e.value)
+    assert "'siso-qpsk-r12-snr8'" in msg
+    assert "'mimo2x2-qam16-r12-snr17'" in msg
+    assert "mixes grids" in msg
+
+
+def test_ladder_error_names_uncoded_rungs():
+    with pytest.raises(ValueError) as e:
+        MCSLadder("uncoded", ("siso-qpsk-r12-snr8", "siso-qpsk-snr5"))
+    assert "siso-qpsk-snr5" in str(e.value)
+    assert "uncoded" in str(e.value)
+
+
+def test_ladder_error_names_out_of_order_rung_pair():
+    with pytest.raises(ValueError) as e:
+        MCSLadder("unsorted", ("siso-qam16-r34-snr18",
+                               "siso-qam16-r12-snr15"))
+    msg = str(e.value)
+    assert "'siso-qam16-r34-snr18'" in msg
+    assert "'siso-qam16-r12-snr15'" in msg
+    assert "rising spectral-efficiency" in msg
+    assert "bits/slot" in msg  # the message quantifies both rungs
+
+
+def test_registered_ladders_all_validate():
+    for name in scenarios.ladder_names():
+        ladder = scenarios.get_ladder(name)
+        effs = [ladder.efficiency(i) for i in range(len(ladder.rungs))]
+        assert effs == sorted(effs), (name, effs)

@@ -79,9 +79,9 @@ def test_ladder_registry_validates():
     lad = get_ladder("siso-coded")
     effs = [lad.efficiency(i) for i in range(len(lad))]
     assert effs == sorted(effs)
-    with pytest.raises(AssertionError):  # uncoded rung rejected
+    with pytest.raises(ValueError):  # uncoded rung rejected
         MCSLadder("bad", ("siso-qpsk-snr5",))
-    with pytest.raises(AssertionError):  # mixed grids rejected
+    with pytest.raises(ValueError):  # mixed grids rejected
         MCSLadder("bad2", ("siso-qpsk-r12-snr8", "mimo2x2-qam16-r12-snr17"))
 
 
