@@ -19,14 +19,18 @@ module directly to refresh its ``experiments/phy/*.json``):
   precision — int8/fp8 kernel paths + modeled GOPS/W         (beyond-paper)
   mesh_cl   — mesh-scale closed loop: cells x users x skew   (beyond-paper)
   faults    — supervised mesh under seeded fault schedules   (beyond-paper)
+  intf      — MU-MIMO SIC vs LMMSE, co-channel, aging, QAM256(beyond-paper)
+  compile   — AOT registry cold-start vs warm persistent cache(beyond-paper)
 
 ``--snapshot`` instead serves one coded waterfall scenario at fp32 /
 int8 / fp8 through ``PhyServeEngine`` and *appends* the result to the
 committed ``BENCH_phy.json`` at the repo root, keyed by the current git
 revision — the cross-PR perf trajectory (slots/sec, goodput, BLER,
-GOPS/W), where the old per-bench ``experiments/phy/*.json`` emits just
+GOPS/W, plus the AOT-registry compile accounting and first-vs-steady
+latency), where the old per-bench ``experiments/phy/*.json`` emits just
 overwrote each other.  Re-running on the same revision replaces that
 revision's entry, so a PR's snapshot converges instead of duplicating.
+``scripts/bench_diff.py`` turns the trajectory into a regression gate.
 """
 import argparse
 import json
@@ -41,9 +45,11 @@ BENCH_PATH = os.path.join(
     "BENCH_phy.json",
 )
 SNAPSHOT_SCENARIO = "siso-qam16-r12-snr15"
+INTF_SCENARIO = "mimo2x2-qam16-r12-intf-snr20"
 SNAPSHOT_PRECISIONS = ("fp32", "int8", "fp8")
-SNAPSHOT_SLOTS = 16
+SNAPSHOT_SLOTS = 48  # >= ~0.3s served per row: stable against host noise
 SNAPSHOT_BATCH = 4
+SNAPSHOT_TRIALS = 3  # best-of-N per row: load noise only slows things down
 
 
 def git_rev() -> str:
@@ -56,37 +62,86 @@ def git_rev() -> str:
         return "unknown"
 
 
+def compile_cols(rep) -> dict:
+    """AOT-registry accounting every snapshot row carries: compile time,
+    true XLA compiles vs cache hits, first vs steady-state step latency.
+    Per-engine compile counts are process-history-dependent (engines
+    share the process registry), so within one snapshot the *first* row
+    pays the compiles and later rows hit."""
+    return {
+        "compile_s": round(rep.compile_time_s, 2),
+        "executables_compiled": rep.executables_compiled,
+        "cache_hits": rep.cache_hits,
+        "first_tick_ms": round(rep.first_tick_s * 1e3, 2)
+        if rep.first_tick_s is not None else None,
+        "steady_tick_ms": round(rep.steady_tick_s * 1e3, 2)
+        if rep.steady_tick_s is not None else None,
+    }
+
+
+def best_of(build_row, trials: int = SNAPSHOT_TRIALS) -> dict:
+    """Serve the same point ``trials`` times; keep the fastest row.
+
+    Host-load noise only ever pushes throughput *down*, so max-of-N is
+    the stable estimator the cross-PR regression gate
+    (``scripts/bench_diff.py``) needs.  Executables are registry-resident
+    (and on-disk cached) after the first trial, so later trials measure
+    pure steady state; compile accounting is reported from the first
+    trial — the one that actually paid acquisition."""
+    rows = [build_row() for _ in range(trials)]
+    best = max(rows, key=lambda r: r["slots_per_sec"])
+    for k in ("compile_s", "executables_compiled", "cache_hits",
+              "first_tick_ms"):
+        best[k] = rows[0][k]
+    return best
+
+
 def snapshot_rows() -> list:
+    rows = []
+    for p in SNAPSHOT_PRECISIONS:
+        rows.append(best_of(lambda p=p: precision_row(p)))
+        print(f"snapshot {rows[-1]['pipeline']}: {rows[-1]}")
+    for build in (interference_row, mesh_closed_row, faults_row):
+        rows.append(best_of(build))
+        print(f"snapshot {rows[-1]['pipeline']}: {rows[-1]}")
+    return rows
+
+
+def _engine_row(pipeline_name, **engine_kw) -> dict:
     import jax
 
     from repro.serve import PhyServeEngine
 
-    rows = []
-    for p in SNAPSHOT_PRECISIONS:
-        eng = PhyServeEngine.from_scenario(
-            SNAPSHOT_SCENARIO, receiver="classical",
-            batch_size=SNAPSHOT_BATCH, precision=p,
-        )
-        eng.submit_traffic(jax.random.PRNGKey(0), SNAPSHOT_SLOTS)
-        rep = eng.run()
-        rows.append({
-            "pipeline": rep.pipeline,
-            "precision": rep.precision,
-            "slots_per_sec": round(rep.slots_per_sec, 1),
-            "bler": round(rep.bler, 4) if rep.bler is not None else None,
-            "goodput_mbps": (
-                round(rep.info_bits_per_sec / 1e6, 2)
-                if rep.info_bits_per_sec is not None else None
-            ),
-            "gops_per_watt": round(rep.gops_per_watt, 1),
-            "l1_residency": round(rep.l1_residency, 3),
-        })
-        print(f"snapshot {rep.pipeline}: {rows[-1]}")
-    rows.append(mesh_closed_row())
-    print(f"snapshot {rows[-1]['pipeline']}: {rows[-1]}")
-    rows.append(faults_row())
-    print(f"snapshot {rows[-1]['pipeline']}: {rows[-1]}")
-    return rows
+    eng = PhyServeEngine.from_scenario(
+        batch_size=SNAPSHOT_BATCH, receiver="classical", **engine_kw,
+    )
+    eng.submit_traffic(jax.random.PRNGKey(0), SNAPSHOT_SLOTS)
+    rep = eng.run()
+    return {
+        "pipeline": pipeline_name or rep.pipeline,
+        "precision": rep.precision,
+        "slots_per_sec": round(rep.slots_per_sec, 1),
+        "bler": round(rep.bler, 4) if rep.bler is not None else None,
+        "goodput_mbps": (
+            round(rep.info_bits_per_sec / 1e6, 2)
+            if rep.info_bits_per_sec is not None else None
+        ),
+        "gops_per_watt": round(rep.gops_per_watt, 1),
+        "l1_residency": round(rep.l1_residency, 3),
+        **compile_cols(rep),
+    }
+
+
+def precision_row(precision: str) -> dict:
+    return _engine_row(None, scenario=SNAPSHOT_SCENARIO,
+                       precision=precision)
+
+
+def interference_row() -> dict:
+    """Co-channel interference serving point for the cross-PR trajectory:
+    the 2x2 MIMO rung with an in-band interferer, served through the
+    fused classical receiver."""
+    return _engine_row("intf-mimo2x2", scenario=INTF_SCENARIO, fused=True)
 
 
 def mesh_closed_row() -> dict:
@@ -105,6 +160,7 @@ def mesh_closed_row() -> dict:
         "goodput_mbps": round(rep.goodput_bits_per_sec / 1e6, 2),
         "gops_per_watt": round(rep.gops_per_watt, 1),
         "l1_residency": round(rep.l1_residency, 3),
+        **compile_cols(rep),
     }
 
 
@@ -131,6 +187,7 @@ def faults_row() -> dict:
         "crashes": rep.crashes,
         "recoveries": rep.recoveries,
         "jobs_failed": rep.jobs_failed,
+        **compile_cols(rep),
     }
 
 
@@ -159,9 +216,11 @@ def append_snapshot(path: str = BENCH_PATH) -> dict:
 def run_sections() -> None:
     from benchmarks import (
         bench_coding,
+        bench_compile,
         bench_concurrent,
         bench_faults,
         bench_gemm,
+        bench_interference,
         bench_harq_serve,
         bench_mesh_closed_loop,
         bench_parallel_gemm,
@@ -189,6 +248,8 @@ def run_sections() -> None:
         ("precision", bench_precision),
         ("mesh_cl", bench_mesh_closed_loop),
         ("faults", bench_faults),
+        ("intf", bench_interference),
+        ("compile", bench_compile),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,99 @@
+"""Diff the last two BENCH_phy.json snapshots and flag regressions.
+
+``benchmarks/run.py --snapshot`` appends one rev-keyed entry per PR to
+the committed ``BENCH_phy.json`` — the cross-PR perf trajectory.  This
+script turns that trajectory into a gate: it compares the newest
+snapshot against the previous one, row by row (keyed on
+``pipeline`` + ``precision``), and exits non-zero when any row's
+``slots_per_sec`` or goodput drops by more than the threshold.
+
+Usage:
+  python scripts/bench_diff.py [--path BENCH_phy.json] [--threshold 0.2]
+
+With fewer than two snapshots there is nothing to diff — exit 0 (the
+first PR on a fresh trajectory must not fail CI).  Rows present in only
+one snapshot are reported but never fail the gate (benches come and go
+across PRs); only a matched row that got slower can fail.
+"""
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_phy.json",
+)
+# the throughput figures the gate watches (higher is better)
+METRICS = ("slots_per_sec", "goodput_mbps")
+
+
+def _rows(entry: dict) -> dict:
+    return {
+        (r.get("pipeline"), r.get("precision")): r
+        for r in entry.get("rows", [])
+    }
+
+
+def diff(prev: dict, curr: dict, threshold: float) -> list:
+    """All matched-row metric changes; each flags whether it regressed."""
+    prows, crows = _rows(prev), _rows(curr)
+    out = []
+    for key in sorted(k for k in crows if k in prows):
+        for metric in METRICS:
+            old, new = prows[key].get(metric), crows[key].get(metric)
+            if not old or new is None:  # absent or zero baseline
+                continue
+            change = (new - old) / old
+            out.append({
+                "pipeline": key[0], "precision": key[1],
+                "metric": metric, "old": old, "new": new,
+                "change": change,
+                "regressed": change < -threshold,
+            })
+    for key in sorted(set(prows) ^ set(crows)):
+        side = "dropped" if key in prows else "new"
+        print(f"  note: row {key[0]}/{key[1]} {side} in latest snapshot")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=DEFAULT_PATH,
+                    help="snapshot history (BENCH_phy.json)")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="fractional drop that fails the gate (0.2 = 20%%)")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.path):
+        print(f"bench_diff: {args.path} missing, nothing to diff")
+        return 0
+    with open(args.path) as f:
+        history = json.load(f)
+    if not isinstance(history, list) or len(history) < 2:
+        print(f"bench_diff: {len(history or [])} snapshot(s), "
+              "nothing to diff")
+        return 0
+
+    prev, curr = history[-2], history[-1]
+    print(f"bench_diff: {prev.get('rev')} ({prev.get('date')}) -> "
+          f"{curr.get('rev')} ({curr.get('date')}), "
+          f"threshold {args.threshold:.0%}")
+    changes = diff(prev, curr, args.threshold)
+    failed = 0
+    for c in changes:
+        mark = "REGRESSED" if c["regressed"] else "ok"
+        print(f"  {mark:9s} {c['pipeline']}/{c['precision']} "
+              f"{c['metric']}: {c['old']} -> {c['new']} "
+              f"({c['change']:+.1%})")
+        failed += c["regressed"]
+    if failed:
+        print(f"bench_diff: {failed} metric(s) regressed more than "
+              f"{args.threshold:.0%}")
+        return 1
+    print(f"bench_diff: ok ({len(changes)} matched metrics)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,14 +42,27 @@ _ORIG_ENV = os.environ.get(_ENV_VAR)  # restored by set_cache_path(None)
 _VERSION = 1
 
 
-def default_cache_path() -> str:
+def repro_cache_path(env_var: str, *leaf: str) -> str:
+    """Resolve a cache location under the shared ``REPRO_*`` convention.
+
+    The environment variable wins outright (tests and CI point it at tmp
+    dirs); otherwise the cache lives under
+    ``~/.cache/repro-tensorpool/<leaf...>``.  Shared by this module's
+    tuning cache (``REPRO_TUNE_CACHE``) and the AOT executable registry's
+    persistent XLA compilation cache (``REPRO_XLA_CACHE``,
+    :mod:`repro.serve.exec_registry`), so every on-disk cache follows one
+    override story.
+    """
     return os.environ.get(
-        _ENV_VAR,
+        env_var,
         os.path.join(
-            os.path.expanduser("~"), ".cache", "repro-tensorpool",
-            "tune.json",
+            os.path.expanduser("~"), ".cache", "repro-tensorpool", *leaf
         ),
     )
+
+
+def default_cache_path() -> str:
+    return repro_cache_path(_ENV_VAR, "tune.json")
 
 
 def cache_key(op: str, shape: Sequence[int], extra: str = "",

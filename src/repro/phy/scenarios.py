@@ -204,6 +204,56 @@ def ladder_names() -> list[str]:
     return sorted(_LADDERS)
 
 
+@dataclasses.dataclass(frozen=True)
+class ExecSpec:
+    """One executable a serving frontend needs: pure data, enumerable
+    before any pipeline is built or compiled.
+
+    The serve layer's AOT registry (:mod:`repro.serve.exec_registry`)
+    consumes these to populate executables ahead of the first TTI:
+    ``lanes == 0`` names a single-cell step, ``lanes > 0`` a mesh step
+    over that lane bucket; ``harq`` selects the closed-loop slot schema
+    (``rv`` + ``prior_llr`` riding along) over the open-loop one.
+    """
+    scenario: str
+    receiver: str = "classical"
+    options: tuple = ()
+    batch: int = 4
+    lanes: int = 0
+    harq: bool = True
+
+
+def ladder_exec_specs(ladder, *, receiver: str = "classical",
+                      options: Optional[dict] = None, batch: int = 4,
+                      lane_buckets=(0,), harq: bool = True
+                      ) -> list[ExecSpec]:
+    """Enumerate the executable set a frontend serving ``ladder`` needs:
+    one :class:`ExecSpec` per (rung, lane bucket).
+
+    ``ladder`` is an :class:`MCSLadder`, a registered ladder name, or a
+    single coded scenario/name (a one-rung ladder) — the same resolution
+    rule as the closed-loop schedulers.  This is what "a mesh/scheduler
+    declares its ladders at construction" compiles down to: a flat list
+    the registry can populate, with no serve-layer imports here.
+    """
+    if isinstance(ladder, str):
+        try:
+            ladder = get_ladder(ladder)
+        except KeyError:
+            ladder = get_scenario(ladder)
+    if isinstance(ladder, LinkScenario):
+        rung_names = [ladder.name]
+    else:
+        rung_names = list(ladder.rungs)
+    opts = tuple(sorted((options or {}).items()))
+    return [
+        ExecSpec(scenario=name, receiver=receiver, options=opts,
+                 batch=batch, lanes=int(lanes), harq=harq)
+        for name in rung_names
+        for lanes in lane_buckets
+    ]
+
+
 _REGISTRY: dict[str, LinkScenario] = {}
 
 

@@ -9,8 +9,22 @@ and the closed-loop paths share one per-cell state machine
 injection (:class:`FaultPlan`/:class:`FaultInjector`) and the supervised
 runtime (:class:`Supervisor`, :class:`SupervisedBatchRunner`) with
 non-finite guards, bounded retries, cell quarantine, and checkpointed
-crash recovery."""
+crash recovery.
+
+Every compiled serving step is owned by the process-wide AOT executable
+registry (:mod:`repro.serve.exec_registry`): keyed by (scenario, receiver,
+precision, batch bucket, backend), populated ahead of the first TTI,
+backed by a persistent on-disk compilation cache (``REPRO_XLA_CACHE``),
+with pluggable batch-bucketing policies (:class:`PowerOfTwoBuckets`,
+:class:`FixedBuckets`, :class:`CostModelBuckets`)."""
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.exec_registry import (
+    BucketPolicy, CostModelBuckets, ExecKey, ExecRegistry, ExecStats,
+    FixedBuckets, PowerOfTwoBuckets, default_cache_dir,
+    disable_persistent_cache, enable_persistent_cache, exec_key_for,
+    get_registry, set_registry,
+    slot_schema, template_batch, template_slot,
+)
 from repro.serve.runtime import (
     BatchRunner, CellLoop, ClosedLoopReport, JobCounter, PhyServeReport,
     SlotLedger, SlotRequest, SlotScheduler, build_serve_report, cell_rng,

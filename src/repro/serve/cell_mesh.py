@@ -65,10 +65,14 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_cell_mesh
 from repro.phy import link as _link
 from repro.phy.scenarios import LinkScenario, get_scenario
+from repro.serve.exec_registry import (
+    ExecStats, PowerOfTwoBuckets, get_registry, slot_schema, template_slot,
+)
 from repro.serve.runtime import (
     BATCHED_KEYS, CellLoop, ClosedLoopReport, JobCounter, PhyServeReport,
     SlotLedger, SlotRequest, TTI_S, TickStats, build_serve_report,
-    cell_rng, make_traffic, occupancy_energy, resolve_ladder, stack_slots,
+    cell_rng, first_steady, make_traffic, occupancy_energy, resolve_ladder,
+    stack_slots,
 )
 
 
@@ -115,13 +119,18 @@ class _Lane:
 
 
 class _Group:
-    """Cells sharing one pipeline/compiled step (same shapes + receiver)."""
+    """Cells sharing one pipeline/compiled step (same shapes + receiver).
+
+    The step executables themselves live in the process's
+    :class:`~repro.serve.exec_registry.ExecRegistry`; ``_execs`` caches
+    the acquired handle per slot schema so dispatch is a dict lookup.
+    """
 
     def __init__(self, pipeline: _link.ReceiverPipeline,
                  cell_idxs: list[int]):
         self.pipeline = pipeline
         self.cell_idxs = cell_idxs
-        self.step = jax.jit(jax.vmap(pipeline._apply))
+        self._execs: dict = {}  # slot schema -> AOT-compiled step
         self._metrics = jax.jit(jax.vmap(
             lambda st: _link.slot_metrics(
                 st, pipeline.scenario, per_slot=True
@@ -167,6 +176,13 @@ class MeshServeReport:
     # slot-weighted L1 residency) — per-cell figures live in ``cells``
     gops_per_watt: Optional[float] = None
     l1_residency: Optional[float] = None
+    # AOT executable accounting (exec_registry): compile wall time, true
+    # XLA compiles vs cache hits, and first vs steady-state step latency
+    compile_time_s: float = 0.0
+    executables_compiled: int = 0
+    cache_hits: int = 0
+    first_tick_s: Optional[float] = None
+    steady_tick_s: Optional[float] = None
 
     def summary(self) -> str:
         parts = [
@@ -215,10 +231,16 @@ class CellMeshEngine:
         :func:`make_cell_mesh` sized so every shape group shards evenly.
     balance: "steal" (lane-granular work stealing, default) or "pad"
         (one lane per cell, pad-only).
+    prebuild: AOT-compile every group's step at construction through the
+        :class:`~repro.serve.exec_registry.ExecRegistry` (cache hits on a
+        warm persistent cache); ``False`` defers each group to its first
+        served step — acquisition still happens outside the timed window.
+    registry: explicit :class:`ExecRegistry` (default: process-wide).
     """
 
     def __init__(self, cells: list[CellSpec], *, batch_size: int = 4,
-                 mesh=None, balance: str = "steal"):
+                 mesh=None, balance: str = "steal",
+                 prebuild: bool = True, registry=None):
         if balance not in ("steal", "pad"):
             raise ValueError(f"unknown balance policy {balance!r}")
         names = [c.name for c in cells]
@@ -254,6 +276,33 @@ class CellMeshEngine:
             mesh = make_cell_mesh(lanes)
         self.mesh = mesh
         self._ledger = SlotLedger()
+        self.registry = registry if registry is not None else get_registry()
+        self.exec_stats = ExecStats()
+        self.step_times: list[float] = []
+        if prebuild:
+            for group in self.groups:
+                self._group_step(group, self._template_staged(group))
+
+    def _template_staged(self, group: _Group) -> dict:
+        """A staged example step for ``group`` built from template slots —
+        same staging path as serving, so avals/shardings match exactly."""
+        scn = self.cells[group.cell_idxs[0]].scenario
+        req = SlotRequest(user_id=-1, slot=template_slot(scn))
+        lane = _Lane(cell_idx=None, reqs=[req], pad=self.batch_size - 1)
+        return self._stage([lane] * len(group.cell_idxs))
+
+    def _group_step(self, group: _Group, example: dict):
+        """Acquire ``group``'s AOT step for ``example``'s slot schema
+        (registry hit once resident; persistent-cache hit when cold)."""
+        schema = slot_schema(example)
+        step = group._execs.get(schema)
+        if step is None:
+            step = self.registry.acquire_pipeline_step(
+                group.pipeline, example, batch=self.batch_size,
+                lanes=len(group.cell_idxs), stats=self.exec_stats,
+            )
+            group._execs[schema] = step
+        return step
 
     # -- traffic ----------------------------------------------------------
     def _cell(self, name: str) -> _Cell:
@@ -381,25 +430,29 @@ class CellMeshEngine:
         """Serve every queued slot on the mesh; returns the mesh report.
 
         Each group's steps run back-to-back; within a group, host staging
-        of step *i+1* overlaps device compute of step *i*.  ``warmup=True``
-        runs each group's first step once untimed so throughput measures
-        the steady-state compiled executable.
+        of step *i+1* overlaps device compute of step *i*.  The group's
+        AOT executable is acquired from the registry before the timed
+        window opens (a no-op when prebuilt/resident), so throughput
+        always measures the steady-state executable; ``warmup`` is kept
+        for API compatibility and no longer re-executes the first step.
         """
+        del warmup  # acquisition replaced warmup execution
         for group in self.groups:
             plan = self._plan(group)
             if not plan:
                 continue
             staged = self._stage(plan[0])
-            if warmup:
-                jax.block_until_ready(group.step(staged))
+            step = self._group_step(group, staged)
             t_group = 0.0
             for i, lanes in enumerate(plan):
                 t0 = time.perf_counter()
-                state = group.step(staged)  # async dispatch
+                state = step(staged)  # async dispatch
                 staged = (self._stage(plan[i + 1])
                           if i + 1 < len(plan) else None)
                 state = jax.block_until_ready(state)
-                t_group += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                t_group += dt
+                self.step_times.append(dt)
                 self._record(group, lanes, state)
             group.wall_s += t_group
             group.n_steps += len(plan)
@@ -469,6 +522,7 @@ class CellMeshEngine:
         gops_w = (
             sum(g * j for g, j in e_pairs) / tot_j if tot_j else None
         )
+        first_s, steady_s = first_steady(self.step_times)
         return MeshServeReport(
             n_cells=len(self.cells),
             n_groups=len(self.groups),
@@ -491,6 +545,11 @@ class CellMeshEngine:
                                if any_coded else None),
             gops_per_watt=gops_w,
             l1_residency=slot_mean("l1_residency"),
+            compile_time_s=self.exec_stats.compile_time_s,
+            executables_compiled=self.exec_stats.executables_compiled,
+            cache_hits=self.exec_stats.cache_hits,
+            first_tick_s=first_s,
+            steady_tick_s=steady_s,
         )
 
 
@@ -556,8 +615,16 @@ class _ClosedLane:
 
 
 class _LadderGroup:
-    """Cells sharing one MCS ladder + receiver: per-rung pipelines and
-    per-rung compiled ``jit(vmap(...))`` steps (same shapes)."""
+    """Cells sharing one MCS ladder + receiver: per-rung pipelines whose
+    compiled mesh steps live in the process's
+    :class:`~repro.serve.exec_registry.ExecRegistry`, cached here per
+    (rung, lane bucket, slot schema) so dispatch is a dict lookup.
+
+    ``donate`` marks the staged batch (arg 0, carrying the combining-LLR
+    priors) for donation on accelerator backends so XLA may fold the
+    prior+derate accumulation into the staging buffer in place (donation
+    is a no-op warning on cpu, so it is gated off there).
+    """
 
     def __init__(self, ladder_name: str, rungs, receiver: str,
                  options: dict, cell_idxs: list[int], donate: bool):
@@ -565,17 +632,11 @@ class _LadderGroup:
         self.rungs = rungs
         self.receiver = receiver
         self.cell_idxs = cell_idxs
+        self.donate = donate
         self.pipelines = [
             _link.build_pipeline(receiver, s, **options) for s in rungs
         ]
-        # the staged batch (arg 0) carries the combining-LLR priors; on
-        # accelerator backends it is donated so XLA may fold the
-        # prior+derate accumulation into the staging buffer in place
-        # (donation is a no-op warning on cpu, so gate it)
-        jit_kw = {"donate_argnums": 0} if donate else {}
-        self.steps = [
-            jax.jit(jax.vmap(p._apply), **jit_kw) for p in self.pipelines
-        ]
+        self._execs: dict = {}  # (mcs, bucket, schema) -> AOT step
 
 
 @dataclasses.dataclass
@@ -629,6 +690,13 @@ class MeshClosedLoopReport:
     crashes: int = 0
     recoveries: int = 0
     jobs_failed: int = 0
+    # AOT executable accounting (exec_registry): compile wall time, true
+    # XLA compiles vs cache hits, and first vs steady-state tick latency
+    compile_time_s: float = 0.0
+    executables_compiled: int = 0
+    cache_hits: int = 0
+    first_tick_s: Optional[float] = None
+    steady_tick_s: Optional[float] = None
     cells: dict = dataclasses.field(default_factory=dict)
 
     def summary(self) -> str:
@@ -657,6 +725,11 @@ class MeshClosedLoopReport:
             parts.append(
                 f"faults={self.faults_injected} crashes={self.crashes} "
                 f"recovered={self.recoveries} failed={self.jobs_failed}"
+            )
+        if self.executables_compiled or self.cache_hits:
+            parts.append(
+                f"compile={self.compile_time_s:.2f}s "
+                f"({self.executables_compiled}x/{self.cache_hits}hit)"
             )
         return "  ".join(parts)
 
@@ -688,8 +761,14 @@ class MeshSlotScheduler:
        finalize through feedback).
     3. **plan** — each cell forms its (MCS, SNR) batches; batches bucket
        per (ladder group, rung) into mesh lanes, padded with filler
-       lanes to a power-of-two lane count so each (group, rung) compiles
-       at most log2(lanes) step shapes.
+       lanes to the pluggable :class:`BucketPolicy`'s lane bucket
+       (:class:`PowerOfTwoBuckets` by default — at most log2(lanes) step
+       shapes per (group, rung); see also :class:`FixedBuckets` and
+       :class:`CostModelBuckets`).  Every step executable is owned by
+       the process's :class:`~repro.serve.exec_registry.ExecRegistry`,
+       AOT-populated at construction (``prebuild=True``) and backed by
+       the persistent compilation cache, so a warm process restart
+       reaches its first TTI with zero new XLA compilations.
     4. **serve** — each bucket stages host-side (per-lane
        :func:`stack_slots`, lane stack, ``cell_slot_shardings``,
        ``device_put``) and runs the rung's ``jit(vmap(pipeline._apply))``
@@ -710,7 +789,9 @@ class MeshSlotScheduler:
                  deadline_ttis: int = 4,
                  max_batches_per_tick: Optional[int] = None,
                  adapt: bool = True, target_bler: float = 0.1,
-                 olla_step: float = 0.1, seed: int = 0):
+                 olla_step: float = 0.1, seed: int = 0,
+                 bucket_policy=None, registry=None,
+                 prebuild: bool = True):
         names = [c.name for c in cells]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate cell names in {names}")
@@ -756,14 +837,31 @@ class MeshSlotScheduler:
         if mesh is None:
             mesh = make_cell_mesh(len(self.specs))
         self.mesh = mesh
-        # lane buckets must stay divisible by the mesh's cell axis
+        self._donate = donate
+        # lane buckets must stay divisible by the mesh's cell axis so
+        # every staged step shards evenly over the mesh
         self._min_lanes = int(self.mesh.devices.shape[0])
-        self._warmed: set = set()
+        self.bucket_policy = (
+            bucket_policy if bucket_policy is not None
+            else PowerOfTwoBuckets(self._min_lanes)
+        )
+        max_lanes = max(len(g.cell_idxs) for g in self.groups)
+        for b in self.bucket_policy.buckets(max_lanes):
+            if b % self._min_lanes:
+                raise ValueError(
+                    f"bucket {b} of {self.bucket_policy!r} is not a "
+                    f"multiple of the mesh cell axis ({self._min_lanes})"
+                )
+        self.registry = registry if registry is not None else get_registry()
+        self.exec_stats = ExecStats()
+        self.tick_times: list[float] = []
         self.wall_s = 0.0
         self.n_steps = 0
         self.n_filler_lanes = 0
         self.n_real_lanes = 0
         self.now = 0
+        if prebuild:
+            self._prebuild()
 
     @classmethod
     def uniform(cls, ladder: str, n_cells: int, *, n_users: int = 4,
@@ -908,16 +1006,17 @@ class MeshSlotScheduler:
 
     # -- staging ----------------------------------------------------------
     def _bucket(self, n_lanes: int) -> int:
-        b = self._min_lanes
-        while b < n_lanes:
-            b *= 2
-        return b
+        """The registered lane bucket a dynamic lane count maps onto —
+        delegated to the pluggable :class:`BucketPolicy`."""
+        return self.bucket_policy.bucket_for(n_lanes)
 
-    def _stage(self, lanes: list[_ClosedLane]) -> dict:
+    def _stage(self, lanes: list[_ClosedLane],
+               bucket: Optional[int] = None) -> dict:
         """Stack one step's lanes to sharded (n_lanes, batch, ...) arrays,
-        padding with filler lanes (replaying lane 0) to the power-of-two
-        lane bucket."""
-        bucket = self._bucket(len(lanes))
+        padding with filler lanes (replaying lane 0) to the policy's lane
+        bucket."""
+        if bucket is None:
+            bucket = self._bucket(len(lanes))
         per_lane = [
             stack_slots(lane.slots, lane.pad, xp=np) for lane in lanes
         ]
@@ -991,14 +1090,8 @@ class MeshSlotScheduler:
         Returns the next bucket's staged batch (from ``prefetch``), so
         the caller's double buffering survives overrides.
         """
-        g = self.groups[gi]
-        step = g.steps[mcs]
-        wkey = (gi, mcs, self._bucket(len(lanes)))
-        if wkey not in self._warmed:
-            jax.block_until_ready(step(staged))
-            self._warmed.add(wkey)
-            # donated steps consume their staged buffers
-            staged = self._stage(lanes)
+        bucket = self._bucket(len(lanes))
+        step = self._step_for(gi, mcs, bucket, staged)
         t0 = time.perf_counter()
         state = step(staged)  # async dispatch
         nxt = prefetch() if prefetch is not None else None
@@ -1006,9 +1099,53 @@ class MeshSlotScheduler:
         self.wall_s += time.perf_counter() - t0
         self.n_steps += 1
         self.n_real_lanes += len(lanes)
-        self.n_filler_lanes += self._bucket(len(lanes)) - len(lanes)
+        self.n_filler_lanes += bucket - len(lanes)
         self._feedback(lanes, mcs, state, stats)
         return nxt
+
+    def _step_for(self, gi: int, mcs: int, bucket: int, example: dict):
+        """Acquire the (group, rung, bucket, schema) AOT step from the
+        registry.  Resident steps are a dict lookup; cold ones compile —
+        or load from the persistent cache — *before* the timed window,
+        which is why first-tick latency no longer hides compile stalls.
+        Acquisition never executes, so donated example buffers survive."""
+        g = self.groups[gi]
+        key = (mcs, bucket, slot_schema(example))
+        step = g._execs.get(key)
+        if step is None:
+            step = self.registry.acquire_pipeline_step(
+                g.pipelines[mcs], example, batch=self.batch_size,
+                lanes=bucket, donate=g.donate, stats=self.exec_stats,
+            )
+            g._execs[key] = step
+        return step
+
+    def _prebuild(self) -> None:
+        """AOT-populate every (group, rung) step at the group's base lane
+        bucket before the first TTI.  Templates ride the exact staging
+        path dispatch uses; with a warm persistent cache this is all
+        cache hits, so a fresh process reaches its first served TTI with
+        zero new XLA compilations.  Buckets beyond the base (bursty
+        ticks) acquire lazily — still through the registry, so they
+        persist for the next process too."""
+        from repro.phy.scenarios import get_scenario, ladder_exec_specs
+
+        for gi, g in enumerate(self.groups):
+            bucket = self._bucket(len(g.cell_idxs))
+            specs = ladder_exec_specs(
+                g.ladder_name, receiver=g.receiver,
+                batch=self.batch_size, lane_buckets=(bucket,), harq=True,
+            )
+            for mcs, spec in enumerate(specs):
+                lane = _ClosedLane(
+                    cell_idx=None,
+                    slots=[template_slot(
+                        get_scenario(spec.scenario), harq=spec.harq
+                    )],
+                    pad=self.batch_size - 1,
+                )
+                staged = self._stage([lane], bucket=spec.lanes)
+                self._step_for(gi, mcs, spec.lanes, staged)
 
     def _end_tick_hook(self, stats: list[TickStats]) -> None:
         """Hook after every cell's end_tick (supervisor: periodic
@@ -1022,7 +1159,11 @@ class MeshSlotScheduler:
             loop.arrive(st)
         self._rebalance()
         items = self._plan_tick()
+        n0, w0 = self.n_steps, self.wall_s
         self._serve_items(items, stats)
+        # first vs steady-state latency: only ticks that served a step
+        if self.n_steps > n0:
+            self.tick_times.append(self.wall_s - w0)
         for loop, st in zip(self.loops, stats):
             loop.end_tick(st)
         self._end_tick_hook(stats)
@@ -1075,6 +1216,7 @@ class MeshSlotScheduler:
                 ))
                 pipes.append(g.pipelines[r])
         energy, gops_w, l1_res = occupancy_energy(occ, pipes)
+        first_s, steady_s = first_steady(self.tick_times)
         return MeshClosedLoopReport(
             n_cells=len(self.loops),
             n_groups=len(self.groups),
@@ -1111,5 +1253,10 @@ class MeshSlotScheduler:
             energy_uj_per_slot=energy,
             gops_per_watt=gops_w,
             l1_residency=l1_res,
+            compile_time_s=self.exec_stats.compile_time_s,
+            executables_compiled=self.exec_stats.executables_compiled,
+            cache_hits=self.exec_stats.cache_hits,
+            first_tick_s=first_s,
+            steady_tick_s=steady_s,
             cells=cells,
         )

@@ -105,9 +105,12 @@ class PhyServeEngine:
     def run(self, warmup: bool = True) -> PhyServeReport:
         """Serve every queued slot; returns the throughput/quality report.
 
-        ``warmup=True`` runs the first batch once untimed so the reported
-        slots/sec measures the steady-state compiled executable, not
-        tracing+compilation.
+        ``warmup=True`` acquires the AOT executable from the process
+        :class:`~repro.serve.exec_registry.ExecRegistry` before the timed
+        window opens (a registry/persistent-cache hit when already
+        resident — no batch is executed twice), so the reported slots/sec
+        measures the steady-state executable, not compilation.  Compile
+        accounting and first/steady batch latency land on the report.
         """
         reqs = self._queue
         self._queue = []
@@ -118,4 +121,5 @@ class PhyServeEngine:
             [r.metrics for r in reqs],
             n_slots=len(reqs), n_batches=n_batches,
             batch_size=self.batch_size, wall_s=runner.wall_s,
+            exec_stats=runner.exec_stats, batch_times=runner.batch_times,
         )

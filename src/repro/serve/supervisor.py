@@ -206,14 +206,15 @@ class SupervisedBatchRunner(BatchRunner):
 
     def __init__(self, pipeline: _link.ReceiverPipeline, batch_size: int,
                  *, receiver: str = "classical", max_retries: int = 2,
-                 backoff_s: float = 0.0):
-        super().__init__(pipeline, batch_size)
+                 backoff_s: float = 0.0, registry=None):
+        super().__init__(pipeline, batch_size, registry=registry)
         self.receiver = receiver
         self.max_retries = max_retries
         self.backoff_s = backoff_s
         self.retries = 0
         self.degraded_batches = 0
         self._ref: Optional[_link.ReceiverPipeline] = None
+        self._ref_execs: dict = {}  # slot schema -> AOT reference step
 
     def _guard_ok(self, state: dict) -> bool:
         for k in self.GUARD_KEYS:
@@ -228,13 +229,30 @@ class SupervisedBatchRunner(BatchRunner):
             )
         return self._ref
 
+    def _ref_exec(self, batch: dict):
+        """The fp32 unfused reference executable, AOT-acquired from the
+        same registry as the primary step (no warmup execution)."""
+        from repro.serve.exec_registry import slot_schema
+
+        schema = slot_schema(batch)
+        step = self._ref_execs.get(schema)
+        if step is None:
+            step = self.registry.acquire_pipeline_step(
+                self._reference(), batch, batch=self.batch_size,
+                stats=self.exec_stats,
+            )
+            self._ref_execs[schema] = step
+        return step
+
     def _execute(self, batch: dict) -> dict:
         state = None
         for attempt in range(self.max_retries + 1):
             t0 = time.perf_counter()
             try:
-                state = jax.block_until_ready(self.pipeline.run(batch))
-                self.wall_s += time.perf_counter() - t0
+                state = jax.block_until_ready(self._step(batch))
+                dt = time.perf_counter() - t0
+                self.wall_s += dt
+                self.batch_times.append(dt)
                 break
             except InjectedFault:
                 self.wall_s += time.perf_counter() - t0
@@ -245,8 +263,9 @@ class SupervisedBatchRunner(BatchRunner):
                     time.sleep(self.backoff_s * 2 ** attempt)
         if not self._guard_ok(state):
             self.degraded_batches += 1
+            ref = self._ref_exec(batch)
             t0 = time.perf_counter()
-            state = jax.block_until_ready(self._reference().run(batch))
+            state = jax.block_until_ready(ref(batch))
             self.wall_s += time.perf_counter() - t0
         return state
 
@@ -317,9 +336,10 @@ class Supervisor(MeshSlotScheduler):
         self._tick_t0 = 0.0
         self._tick_deferred = False
         self._seq = 0
-        # fp32 unfused reference steps, built lazily per (group, rung)
-        self._ref_steps: dict = {}
-        self._ref_warmed: set = set()
+        # fp32 unfused reference pipelines (lazy per (group, rung)); their
+        # AOT steps live in the registry, cached per (gi, mcs, bucket)
+        self._ref_pipes: dict = {}
+        self._ref_execs: dict = {}
 
         if checkpoint_dir is None:
             self._ckpt_tmp = tempfile.TemporaryDirectory(
@@ -455,18 +475,45 @@ class Supervisor(MeshSlotScheduler):
                 u.backlog.appendleft(job)
 
     # -- degradation ladder ------------------------------------------------
-    def _ref_step(self, gi: int, mcs: int):
+    def _ref_step(self, gi: int, mcs: int, bucket: int, example: dict):
         """The fp32 unfused reference step for (group, rung): same
         receiver kind, no build options (no fused kernels, no quantized
-        precision), no buffer donation."""
-        key = (gi, mcs)
-        if key not in self._ref_steps:
-            g = self.groups[gi]
-            p = _link.build_pipeline(g.receiver, g.rungs[mcs])
-            self._ref_steps[key] = jax.jit(jax.vmap(p._apply))
-        return self._ref_steps[key]
+        precision), no buffer donation.  AOT-acquired from the registry —
+        the degradation fallback compiles (or loads from the persistent
+        cache) outside the timed window like every other executable."""
+        key = (gi, mcs, bucket)
+        step = self._ref_execs.get(key)
+        if step is None:
+            pkey = (gi, mcs)
+            if pkey not in self._ref_pipes:
+                g = self.groups[gi]
+                self._ref_pipes[pkey] = _link.build_pipeline(
+                    g.receiver, g.rungs[mcs]
+                )
+            step = self.registry.acquire_pipeline_step(
+                self._ref_pipes[pkey], example, batch=self.batch_size,
+                lanes=bucket, donate=False, stats=self.exec_stats,
+            )
+            self._ref_execs[key] = step
+        return step
 
     # -- staged-tensor fault injection ------------------------------------
+    def _corrupt(self, staged: dict, key: str, li: int, value) -> dict:
+        """Overwrite lane ``li`` of ``staged[key]`` and re-put the result
+        under the mesh sharding — the AOT-compiled step's input shardings
+        are baked at lowering time, and the ``.at[].set()`` output need
+        not match them."""
+        from repro.distributed import sharding as shd
+        from repro.serve.runtime import BATCHED_KEYS
+
+        staged = dict(staged)
+        corrupted = jnp.asarray(staged[key]).at[li].set(value)
+        shardings = shd.cell_slot_shardings(
+            staged, self.mesh, batched_keys=BATCHED_KEYS
+        )
+        staged[key] = jax.device_put(corrupted, shardings[key])
+        return staged
+
     def _inject_stage(self, staged: dict, lanes, seq: int) -> dict:
         for ev in self.injector.stage_events(self.now, seq):
             li = next(
@@ -474,19 +521,13 @@ class Supervisor(MeshSlotScheduler):
                  if l.cell_idx == ev.cell), 0,
             )
             if ev.kind == "nan_llr" and "prior_llr" in staged:
-                staged = dict(staged)
-                staged["prior_llr"] = jnp.asarray(
-                    staged["prior_llr"]
-                ).at[li].set(jnp.nan)
+                staged = self._corrupt(staged, "prior_llr", li, jnp.nan)
             elif ev.kind == "corrupt_slot":
                 key = next(
                     (k for k in ("y_time", "y") if k in staged), None
                 )
                 if key is not None:
-                    staged = dict(staged)
-                    staged[key] = jnp.asarray(
-                        staged[key]
-                    ).at[li].set(jnp.inf)
+                    staged = self._corrupt(staged, key, li, jnp.inf)
         return staged
 
     # -- the supervised bucket step ---------------------------------------
@@ -506,13 +547,8 @@ class Supervisor(MeshSlotScheduler):
             self._requeue(lanes)
             return prefetch() if prefetch is not None else None
 
-        g = self.groups[gi]
-        step = g.steps[mcs]
-        wkey = (gi, mcs, self._bucket(len(lanes)))
-        if wkey not in self._warmed:
-            jax.block_until_ready(step(staged))
-            self._warmed.add(wkey)
-            staged = self._stage(lanes)
+        bucket = self._bucket(len(lanes))
+        step = self._step_for(gi, mcs, bucket, staged)
 
         staged = self._inject_stage(staged, lanes, seq)
         straggle = self.injector.straggle_s(self.now, seq)
@@ -559,7 +595,7 @@ class Supervisor(MeshSlotScheduler):
 
         self.n_steps += 1
         self.n_real_lanes += len(lanes)
-        self.n_filler_lanes += self._bucket(len(lanes)) - len(lanes)
+        self.n_filler_lanes += bucket - len(lanes)
 
         crc = np.asarray(state["crc_ok"]).copy()
         llr = np.asarray(state["cw_llr"]).copy()
@@ -575,12 +611,8 @@ class Supervisor(MeshSlotScheduler):
             for li in bad:
                 self._cell_degraded[lanes[li].cell_idx] += 1
                 self._charge_fault(lanes[li].cell_idx)
-            ref = self._ref_step(gi, mcs)
             clean = self._stage(lanes)
-            if wkey not in self._ref_warmed:
-                jax.block_until_ready(ref(clean))
-                self._ref_warmed.add(wkey)
-                clean = self._stage(lanes)
+            ref = self._ref_step(gi, mcs, bucket, clean)
             t0 = time.perf_counter()
             out = jax.block_until_ready(ref(clean))
             self.wall_s += time.perf_counter() - t0

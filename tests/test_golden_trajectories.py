@@ -28,9 +28,12 @@ from repro.serve import MeshSlotScheduler, SlotScheduler
 
 GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
 
-# fields derived from host wall time: not reproducible, never snapshotted
+# fields derived from host wall time or process compile history: not
+# reproducible, never snapshotted
 _UNSTABLE = {"wall_s", "slots_per_sec", "goodput_bits_per_sec",
-             "info_bits_per_sec", "cells"}
+             "info_bits_per_sec", "cells",
+             "compile_time_s", "executables_compiled", "cache_hits",
+             "first_tick_s", "steady_tick_s"}
 
 
 def _stable(report) -> dict:

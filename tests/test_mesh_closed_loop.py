@@ -42,7 +42,11 @@ _SMOKE = dict(n_subcarriers=64, fft_size=64, n_taps=4, delay_spread=1.0)
 
 # wall-clock-dependent report fields: everything else must be bit-equal
 # across parity/determinism runs
-_WALL_FIELDS = {"wall_s", "slots_per_sec", "goodput_bits_per_sec"}
+_WALL_FIELDS = {
+    "wall_s", "slots_per_sec", "goodput_bits_per_sec",
+    "compile_time_s", "executables_compiled", "cache_hits",
+    "first_tick_s", "steady_tick_s",
+}
 
 
 def _small(name: str, new: str, **kw):

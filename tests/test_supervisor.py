@@ -52,8 +52,13 @@ from repro.serve import (
 
 _SMOKE = dict(n_subcarriers=64, fft_size=64, n_taps=4, delay_spread=1.0)
 
-# wall-clock-dependent report fields; everything else must be bit-equal
-_WALL_FIELDS = {"wall_s", "slots_per_sec", "goodput_bits_per_sec"}
+# wall-clock-dependent report fields (incl. process-history-dependent
+# AOT compile accounting); everything else must be bit-equal
+_WALL_FIELDS = {
+    "wall_s", "slots_per_sec", "goodput_bits_per_sec",
+    "compile_time_s", "executables_compiled", "cache_hits",
+    "first_tick_s", "steady_tick_s",
+}
 
 # fault-accounting fields: stripped only when comparing a faulted
 # supervised run against a clean baseline (the *trajectory* must match;
